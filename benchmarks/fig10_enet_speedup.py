@@ -1,0 +1,46 @@
+"""Fig. 10 reproduction: ENet cycle breakdown + overall speedup.
+
+Paper claims: dilated 85% -> 2%, transposed 7% -> 2%, general 8% -> 9%,
+87.8% cycle reduction, 8.2x speedup over the ideal dense baseline.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import cycle_model as cm
+from repro.core.enet_spec import enet_512_layers
+
+
+def run(csv: bool = False) -> list[tuple]:
+    t0 = time.perf_counter()
+    layers = enet_512_layers()
+    rep = cm.report(layers)
+    g = cm.summarize(layers)
+    us = (time.perf_counter() - t0) * 1e6
+
+    ratios = {k: g[k].cycles_ours / g[k].cycles_dense
+              for k in ("dilated", "transposed", "general")}
+    mix = {"dilated": 85.0, "transposed": 7.0, "general": 8.0}
+    papermix_speedup = 100.0 / sum(mix[k] * ratios[k] for k in mix)
+
+    rows = [
+        ("fig10.share_dilated_pct", us, f"{rep['share_dilated_pct']:.1f} (paper 85)"),
+        ("fig10.share_transposed_pct", us, f"{rep['share_transposed_pct']:.1f} (paper 7)"),
+        ("fig10.share_general_pct", us, f"{rep['share_general_pct']:.1f} (paper 8)"),
+        ("fig10.ours_dilated_pct", us, f"{rep['ours_dilated_pct']:.1f} (paper 2)"),
+        ("fig10.ours_transposed_pct", us, f"{rep['ours_transposed_pct']:.1f} (paper 2)"),
+        ("fig10.ours_general_pct", us, f"{rep['ours_general_pct']:.1f} (paper 9)"),
+        ("fig10.cycle_reduction_pct", us, f"{rep['cycle_reduction_pct']:.1f} (paper 87.8)"),
+        ("fig10.overall_speedup_x", us, f"{rep['overall_speedup']:.2f} (paper 8.2)"),
+        ("fig10.papermix_speedup_x", us, f"{papermix_speedup:.2f} (consistency check)"),
+    ]
+    if not csv:
+        print("== Fig. 10: ENet cycle counts (ideal-dense baseline = 100%) ==")
+        for name, _, derived in rows:
+            print(f"  {name:32s} {derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Roofline table: reads the dry-run artifacts (results/dryrun/*.json) and
+prints the three terms + bottleneck + MODEL_FLOPS ratio per cell.
+
+Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+
+V5E_FLOPS = 197e12
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic MODEL_FLOPS per step: 6*N*D train (N = active params),
+    2*N*D prefill, 2*N*B decode (matmul terms only — the denominator of the
+    'useful compute' ratio)."""
+    cfg = get_config(arch)
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    cell = SHAPES[shape]
+    if cell.kind == "train":
+        return 6.0 * n_active * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_active * cell.global_batch * cell.seq_len
+    return 2.0 * n_active * cell.global_batch  # one decoded token
+
+
+def load_records(out_dir: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(csv: bool = False, out_dir: str = "results/dryrun") -> list[tuple]:
+    rows = []
+    recs = [r for r in load_records(out_dir) if r.get("mesh") == "16x16"]
+    if not recs:
+        rows.append(("roofline.no_dryrun_artifacts", 0.0,
+                     "run repro.launch.dryrun first"))
+        if not csv:
+            print("no dry-run artifacts found under", out_dir)
+        return rows
+    if not csv:
+        print(f"== Roofline (single pod, 256 chips x {V5E_FLOPS/1e12:.0f} "
+              f"TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI) ==")
+        hdr = (f"{'arch x shape':42s} {'comp_ms':>8s} {'mem_ms':>8s} "
+               f"{'coll_ms':>8s} {'bound':>6s} {'MFLOP%':>7s} {'mem_GB':>7s}")
+        print(hdr)
+    for r in recs:
+        cell = f"{r['arch']} x {r['shape']}"
+        if r["status"] != "ok":
+            if not csv:
+                print(f"{cell:42s} {r['status'].upper()}: "
+                      f"{r.get('reason', r.get('error', ''))[:60]}")
+            rows.append((f"roofline.{r['arch']}.{r['shape']}.status", 0.0,
+                         r["status"]))
+            continue
+        t = r["roofline"]
+        dom = max(t, key=t.get).replace("_s", "")
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_global = r["hlo"]["flops_per_chip"] * r["chips"]
+        ratio = mf / hlo_global if hlo_global else 0.0
+        if not csv:
+            print(f"{cell:42s} {t['compute_s']*1e3:8.2f} "
+                  f"{t['memory_s']*1e3:8.2f} {t['collective_s']*1e3:8.2f} "
+                  f"{dom:>6s} {100*ratio:7.1f} "
+                  f"{r['memory']['per_chip_total_gb']:7.2f}")
+        rows.append((f"roofline.{r['arch']}.{r['shape']}.dominant", 0.0, dom))
+        rows.append((f"roofline.{r['arch']}.{r['shape']}.model_flops_ratio",
+                     0.0, f"{ratio:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

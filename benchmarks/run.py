@@ -1,0 +1,23 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import (enet_roofline, fig10_enet_speedup,
+                            fig11_dilated_layers, fig12_transposed_layers,
+                            kernel_bench, roofline, table1_throughput)
+
+    print("name,us_per_call,derived")
+    for mod in (fig10_enet_speedup, fig11_dilated_layers,
+                fig12_transposed_layers, table1_throughput, kernel_bench,
+                enet_roofline, roofline):
+        for name, us, derived in mod.run(csv=True):
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

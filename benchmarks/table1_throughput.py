@@ -1,0 +1,35 @@
+"""Table I reproduction (throughput rows): peak vs zero-skipping GOPS.
+
+Paper: 168 GOPS peak / 1377 GOPS logical on ENet.  Area and power rows are
+silicon measurements — out of scope for a software reproduction (noted in
+DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import cycle_model as cm
+from repro.core.enet_spec import enet_512_layers
+
+
+def run(csv: bool = False) -> list[tuple]:
+    t0 = time.perf_counter()
+    rep = cm.report(enet_512_layers())
+    us = (time.perf_counter() - t0) * 1e6
+    rows = [
+        ("table1.peak_gops", us, f"{rep['peak_gops']:.0f} (paper 168)"),
+        ("table1.effective_gops_enet", us,
+         f"{rep['effective_gops']:.0f} (paper 1377)"),
+        ("table1.macs_per_cycle", us, f"{cm.MACS_PER_CYCLE}"),
+        ("table1.freq_mhz", us, f"{cm.FREQ_HZ / 1e6:.0f}"),
+    ]
+    if not csv:
+        print("== Table I: throughput (software-reproducible rows) ==")
+        for name, _, derived in rows:
+            print(f"  {name:32s} {derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Serve a small LM with batched requests through the production serve path
+(prefill -> KV-cached decode), on any of the 10 assigned architectures.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma3-12b
+(reduced config on CPU; --full would use the published size.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.launch.serve import Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b", choices=ARCH_IDS)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
+    if cfg.encoder_layers:
+        raise SystemExit("use whisper example for enc-dec serving")
+    print(f"[serve_lm] {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"pattern={cfg.block_pattern}")
+    server = Server(cfg, batch=args.batch,
+                    max_len=args.prompt_len + args.gen_len + 1)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
+                           dtype=np.int32)
+    t0 = time.time()
+    out = server.generate(prompts, args.gen_len)
+    dt = time.time() - t0
+    print(f"[serve_lm] {out.shape[0]} requests x {out.shape[1]} new tokens "
+          f"in {dt:.2f}s ({out.size / dt:.1f} tok/s)")
+    print("[serve_lm] greedy decode is deterministic:", out[:, :6].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver: train ENet on synthetic Cityscapes-like data with every
+dilated/transposed convolution running through the paper's decomposition.
+
+  PYTHONPATH=src python examples/train_enet.py --steps 200 --hw 64
+
+(~100M-MAC-scale model; a few hundred steps on CPU at --hw 64.)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import SegDataPipeline
+from repro.models import enet
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--hw", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=19)
+    ap.add_argument("--lr", type=float, default=5e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    params = enet.init_params(jax.random.PRNGKey(0), args.classes)
+    opt = adamw_init(params)
+    pipe = SegDataPipeline(args.batch, hw=args.hw, classes=args.classes)
+
+    @jax.jit
+    def train_step(params, opt, image, label, lr):
+        def loss_fn(p):
+            logits = enet.forward(p, image)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(logp, label[..., None], axis=-1)
+            return jnp.mean(nll)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt, gnorm = adamw_update(grads, opt, params, lr=lr,
+                                          weight_decay=1e-4)
+        return params, opt, loss, gnorm
+
+    losses = []
+    for step in range(args.steps):
+        b = pipe.batch_at(step)
+        lr = cosine_schedule(jnp.int32(step), args.steps // 10, args.steps,
+                             args.lr)
+        t0 = time.time()
+        params, opt, loss, gnorm = train_step(
+            params, opt, jnp.asarray(b["image"]), jnp.asarray(b["label"]), lr)
+        losses.append(float(loss))
+        if step % args.log_every == 0:
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"gnorm {float(gnorm):.3f} dt {(time.time()-t0)*1e3:.0f}ms",
+                  flush=True)
+
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\nloss: first10={first:.4f} last10={last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    # pixel accuracy on a fresh batch
+    b = pipe.batch_at(10_000)
+    pred = jnp.argmax(enet.forward(params, jnp.asarray(b["image"])), -1)
+    acc = float(jnp.mean(pred == jnp.asarray(b["label"])))
+    print(f"pixel accuracy on held-out batch: {acc:.3f} "
+          f"(chance = {1.0 / args.classes:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Whisper conv frontend built from the repo's own conv engine.
+
+The assignment stubs the audio frontend (input_specs supplies precomputed
+frame embeddings), but the two 1-D convs of the real frontend are expressible
+with `repro.core.decompose.conv2d` — this demo shows them and checks shapes:
+mel (B, 3000, 80) -> conv k=3 s=1 -> gelu -> conv k=3 s=2 -> (B, 1500, D).
+
+  PYTHONPATH=src python examples/whisper_frontend_demo.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decompose import conv2d
+
+B, T, MEL, D = 2, 3000, 80, 384
+key = jax.random.PRNGKey(0)
+k1, k2, k3 = jax.random.split(key, 3)
+
+mel = jax.random.normal(k1, (B, T, MEL))
+# 1-D convs as (H=1) 2-D convs: (B, 1, T, C) with k=(1,3)
+x = mel[:, None]                                     # (B, 1, T, MEL)
+w1 = jax.random.normal(k2, (1, 3, MEL, D)) * 0.02
+w2 = jax.random.normal(k3, (1, 3, D, D)) * 0.02
+
+h = jax.nn.gelu(conv2d(x, w1))                        # stride 1, SAME
+h = jax.nn.gelu(conv2d(h, w2, stride=2))              # stride 2 -> T/2
+frames = h[:, 0]                                      # (B, 1500, D)
+print("mel", mel.shape, "-> frames", frames.shape)
+assert frames.shape == (B, T // 2, D)
+assert bool(jnp.all(jnp.isfinite(frames)))
+print("whisper frontend via repro.core.decompose: OK "
+      "(production path uses the stub per the assignment)")

@@ -1,0 +1,142 @@
+"""Sharded, manifest-driven checkpointing with elastic restore.
+
+Layout per step::
+
+    <dir>/step_000100/
+        manifest.json            # tree structure, shapes, dtypes, writer info
+        host_000.npz             # this host's addressable shards
+        COMMITTED                # written last -> crash-safe atomicity
+
+Restore is **elastic**: the manifest stores logical (global) shapes, restore
+re-shards onto whatever mesh/sharding the caller provides (different chip
+count than the writer is fine).  ``save_checkpoint(..., background=True)``
+runs serialization off the training thread; callers sync via the returned
+``threading.Thread`` (the train loop joins before the next save).
+
+Device->host transfer happens eagerly (cheap: addressable shards only); only
+file IO is deferred to the background thread.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _key(i: int) -> str:
+    return f"leaf_{i:05d}"
+
+
+def _to_serializable(arr: np.ndarray) -> np.ndarray:
+    """npz-safe view: ml_dtypes (bf16/f8) round-trip as uint views."""
+    if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype) or \
+            "float8" in str(arr.dtype):
+        return arr.view(np.uint8 if arr.dtype.itemsize == 1 else np.uint16)
+    return arr
+
+
+def _from_serializable(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    import ml_dtypes
+    if "bfloat16" in dtype_str:
+        return arr.view(ml_dtypes.bfloat16)
+    if "float8_e4m3" in dtype_str:
+        return arr.view(ml_dtypes.float8_e4m3fn)
+    return arr
+
+
+def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
+                    background: bool = False) -> threading.Thread | None:
+    """Save a pytree of (possibly sharded) jax arrays / numpy arrays."""
+    leaves, treedef = _flatten(tree)
+    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "shapes": [list(l.shape) for l in host_leaves],
+        "dtypes": [str(l.dtype) for l in host_leaves],
+        "process_count": jax.process_count(),
+    }
+
+    def _write():
+        final = os.path.join(directory, f"step_{step:06d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"host_{jax.process_index():03d}.npz"),
+                 **{_key(i): _to_serializable(l)
+                    for i, l in enumerate(host_leaves)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+            f.write("ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(directory, keep)
+
+    if background:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:06d}"),
+                      ignore_errors=True)
+
+
+def all_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(directory, name, "COMMITTED")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, abstract_tree,
+                       shardings=None):
+    """Restore into the structure of ``abstract_tree``.
+
+    ``shardings``: optional matching pytree of NamedSharding — arrays are
+    device_put with them (elastic re-shard onto the current mesh).
+    """
+    path = os.path.join(directory, f"step_{step:06d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, f"host_{jax.process_index():03d}.npz"))
+    leaves, treedef = _flatten(abstract_tree)
+    assert len(leaves) == len(manifest["shapes"]), "tree structure changed"
+    restored = []
+    for i, ref in enumerate(leaves):
+        arr = _from_serializable(data[_key(i)], manifest["dtypes"][i])
+        if list(arr.shape) != list(ref.shape):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != model {ref.shape}")
+        restored.append(arr.astype(ref.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, restored)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree,
+                            shardings)
+    return tree

@@ -1,0 +1,69 @@
+"""Unified public API for the paper's decomposition technique.
+
+``conv2d`` dispatches to dense / dilated / transposed execution with the
+decomposition applied automatically — this is the entry point the model zoo
+(ENet, conv frontends) uses, so the technique is a first-class framework
+feature rather than a demo.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import dilated as _dil
+from repro.core import transposed as _tr
+
+
+def conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    stride: int = 1,
+    dilation: int = 1,
+    transposed: bool = False,
+    padding: int | None = None,
+    output_padding: int = 0,
+    decomposed: bool = True,
+    strategy: str = "batched",
+) -> jax.Array:
+    """General 2-D convolution with the paper's decomposition applied.
+
+    Args:
+      x: (N, H, W, Cin) input.
+      w: (k, k, Cin, Cout) compact kernel (never zero-inserted by the caller).
+      stride: forward-conv stride, or upsampling factor when ``transposed``.
+      dilation: dilation step ``d = D + 1`` (forward conv only).
+      transposed: run a transposed (fractionally-strided) convolution.
+      padding: ``None`` -> SAME for forward conv, ``(k-1)//2`` for transposed.
+      output_padding: transposed-conv extra size on the high side.
+      decomposed: apply the paper's decomposition (False -> naive zero-laden
+        execution, used as the measured baseline).
+      strategy: 'batched' (TPU phase-batched) or 'ragged' (paper-faithful) for
+        the dilated path.
+    """
+    k = w.shape[0]
+    if transposed:
+        if dilation != 1:
+            raise ValueError("dilated transposed convolution not used by the paper")
+        p = (k - 1) // 2 if padding is None else padding
+        if decomposed:
+            return _tr.transposed_conv2d_decomposed(x, w, stride, p, output_padding)
+        return _tr.transposed_conv2d_naive(x, w, stride, p, output_padding)
+    if dilation > 1:
+        if stride != 1:
+            raise ValueError("strided dilated convolution not used by the paper")
+        if decomposed:
+            return _dil.dilated_conv2d_decomposed(x, w, dilation, strategy=strategy)
+        return _dil.dilated_conv2d_naive(x, w, dilation)
+    # plain dense conv (stride >= 1)
+    import jax.numpy as jnp  # noqa: F401
+    from jax import lax
+
+    p = (k - 1) // 2 if padding is None else padding
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=[(p, p), (p, p)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+__all__ = ["conv2d"]

@@ -1,0 +1,3 @@
+from repro.data.pipeline import LMDataPipeline, SegDataPipeline
+
+__all__ = ["LMDataPipeline", "SegDataPipeline"]

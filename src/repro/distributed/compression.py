@@ -1,0 +1,61 @@
+"""Gradient compression for cross-pod links (distributed-optimization trick).
+
+Two schemes, applied to gradients *before* they cross the slow pod boundary:
+
+  * ``bf16``  — cast f32 grads to bf16 (2x wire reduction, negligible loss).
+  * ``int8``  — per-tensor symmetric int8 quantization with **error
+    feedback**: the quantization residual is carried in optimizer-adjacent
+    state and added to the next step's gradient, making the scheme unbiased
+    over time (1-bit-Adam-style convergence behaviour at 4x reduction).
+
+Under GSPMD the cast happens before the pod-axis ``psum`` so the all-reduce
+operand (what the §Roofline collective parser sizes) is genuinely int8/bf16 —
+the wire saving is visible in the compiled HLO, not simulated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def decompress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8_ef(grads, errors):
+    """Returns (q_tree, scale_tree, new error-feedback tree)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    eleaves = treedef.flatten_up_to(errors)
+    qs, scales, new_es = [], [], []
+    for g, e in zip(leaves, eleaves):
+        g = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g)
+        qs.append(q)
+        scales.append(scale)
+        new_es.append(g - dequantize_int8(q, scale))
+    unflat = jax.tree_util.tree_unflatten
+    return unflat(treedef, qs), unflat(treedef, scales), unflat(treedef,
+                                                                new_es)
+
+
+def decompress_int8(q_tree, scale_tree):
+    return jax.tree.map(dequantize_int8, q_tree, scale_tree)

@@ -1,0 +1,174 @@
+"""Logical-axis sharding: one rule set drives 1-device smoke tests, the
+256-chip single pod and the 512-chip multi-pod mesh.
+
+Mesh axes: ``(pod?, data, model)``.
+  * ``data``  — DP for activations, FSDP for parameters/optimizer state.
+  * ``model`` — TP (heads / ffn hidden / vocab) and EP (experts).
+  * ``pod``   — pure DP across pods: batch shards over it, parameters are
+    replicated per pod, gradients all-reduce over pod links.
+
+Two rule families:
+  * **activation constraints** — models call ``layers.lc(x, logical_axes)``;
+    `install(mesh)` resolves logical names to mesh axes with divisibility
+    guards (a constraint that does not divide is dropped, never an error, so
+    the same model code runs on any mesh).
+  * **parameter specs** — ``param_pspec(path, shape)`` maps parameter tree
+    paths to PartitionSpecs by name rules (TP dim) + FSDP on the other dim.
+"""
+
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as _layers
+
+# logical activation axis -> ordered mesh-axis candidates (first that divides
+# the dim and is not already used wins; tuples shard over several axes).
+_ACT_CANDIDATES = {
+    "data": (("pod", "data"), ("data",)),
+    "data_kvseq": (("pod", "data"), ("data",)),
+    # KV-cache sequence axis: shard as wide as divisibility allows — over
+    # everything for batch-1 long-context decode, over the model axis when
+    # the batch already owns the data axes (32k batched decode).
+    "kvseq": (("pod", "data", "model"), ("data", "model"), ("pod", "data"),
+              ("data",), ("model",)),
+    "model": (("model",),),
+    "model_kv": (("model",),),
+    "expert": (("model",),),
+    "fsdp": (("data",),),
+    # sequence parallelism: the residual stream between layers shards its
+    # sequence dim over the model axis (Megatron-SP); decode (S=1) drops it
+    # via the divisibility guard.
+    "seq": (("model",),),
+}
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_spec(mesh: Mesh, logical: tuple, shape: tuple[int, ...]) -> P:
+    """Logical names -> PartitionSpec with divisibility + reuse guards."""
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        entry = None
+        if name is not None:
+            for cand in _ACT_CANDIDATES.get(name, ()):
+                cand = tuple(a for a in cand if a in mesh.shape)
+                if not cand or any(a in used for a in cand):
+                    continue
+                if dim % _axes_size(mesh, cand) == 0:
+                    entry = cand if len(cand) > 1 else cand[0]
+                    used.update(cand)
+                    break
+        out.append(entry)
+    return P(*out)
+
+
+def install(mesh: Mesh) -> None:
+    """Route ``layers.lc`` constraints onto this mesh."""
+
+    def constrain(x, logical):
+        spec = resolve_spec(mesh, logical, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    _layers.set_constraint_fn(constrain)
+
+
+def uninstall() -> None:
+    _layers.set_constraint_fn(None)
+
+
+@contextmanager
+def use_mesh(mesh: Mesh):
+    install(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        uninstall()
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules
+# ---------------------------------------------------------------------------
+# (path regex, logical axes for the LAST ndim dims). Stacked-layer leading
+# axes (repeat/num_layers) are never sharded. "fsdp" -> data axis.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("model", "fsdp")),               # (V, D)
+    (r"lm_head$", ("fsdp", "model")),             # (D, V)
+    (r"enc_pos$", (None, None)),
+    (r"(wq|wk|wv)$", ("fsdp", "model")),          # (D, H*hd)
+    (r"wo$", ("model", "fsdp")),                  # (H*hd, D)
+    (r"router$", ()),                             # (D, E) tiny, replicated
+    # MoE expert-stacked weights: experts -> model axis (EP), fsdp on D
+    (r"we_gate$", ("expert", "fsdp", None)),      # (E, D, F)
+    (r"we_up$", ("expert", "fsdp", None)),
+    (r"we_down$", ("expert", None, "fsdp")),      # (E, F, D)
+    (r"(w_gate|w_up)$", ("fsdp", "model")),       # dense FFN (D, F)
+    (r"w_down$", ("model", "fsdp")),              # dense FFN (F, D)
+    # mamba
+    (r"in_proj$", ("fsdp", "model")),
+    (r"out_proj$", ("model", "fsdp")),
+    (r"x_proj$", ("model", None)),
+    (r"dt_proj$", (None, "model")),
+    (r"conv_w$", (None, "model")),
+    (r"(conv_b|dt_bias|D)$", ("model",)),
+    (r"A_log$", ("model", None)),
+    # xlstm
+    (r"up_proj$", ("fsdp", "model")),
+    (r"w_if$", ("model", None)),
+    (r"(w_gates|r_gates|ff_up)$", ("fsdp", "model")),
+    (r"ff_down$", ("model", "fsdp")),
+    # norms / scalars replicated
+    (r".*", ()),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_pspec(mesh: Mesh, path: str, shape: tuple[int, ...]) -> P:
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            if not logical:
+                return P()
+            # right-align logical axes onto the trailing dims
+            full = (None,) * (len(shape) - len(logical)) + tuple(logical)
+            return resolve_spec(mesh, full, shape)
+    return P()
+
+
+def make_param_shardings(mesh: Mesh, abstract_params):
+    """Pytree of NamedShardings matching an abstract (eval_shape) pytree."""
+
+    def leaf(path, x):
+        return NamedSharding(mesh, param_pspec(mesh, _path_str(path), x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    """Tokens (B, S, ...) shard the batch over (pod, data)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
+                                 *([None] * (ndim - 1))))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

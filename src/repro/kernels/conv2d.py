@@ -1,0 +1,116 @@
+"""Dense 2-D convolution Pallas kernel — the MXU workhorse after decomposition.
+
+The paper's decomposition reduces dilated/transposed convolutions to *dense*
+convolutions; this kernel is the TPU execution engine for those.  It computes
+an NHWC convolution as a sum of ``kh*kw`` shifted implicit-GEMM taps, keeping
+the MXU contraction on ``Cin`` and the lane dimension on a ``Cout`` tile.
+
+Tiling (per grid step): one batch element, ``TH`` output rows x full output
+width, one ``TC``-wide ``Cout`` tile.  The input row halo (``kh - stride``
+rows) is assembled *without overlapping BlockSpecs* by passing the input
+twice — the current row tile and the next row tile — and concatenating in
+VMEM (standard Pallas halo idiom).
+
+VMEM per step ~ x_tile(2 * s*TH * Wp * Cin) + w(kh*kw*Cin*TC) + out(TH*W*TC),
+sized well under a v5e core's VMEM for every shape used in this repo.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_cur, x_nxt, w, out, *, th: int, kh: int, kw: int,
+                 stride: int, w_out: int):
+    """One (batch, row-tile, cout-tile) grid step."""
+    s = stride
+    halo = kh - s
+    # assemble the input window: s*TH rows + halo rows from the next tile
+    xw = x_cur[0]
+    if halo > 0:
+        xw = jnp.concatenate([xw, x_nxt[0][:halo]], axis=0)
+    cin = xw.shape[-1]
+    acc = jnp.zeros((th * w_out, out.shape[-1]), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            # output row t reads input row s*t + dy; col c reads s*c + dx
+            rows = xw[dy : dy + s * (th - 1) + 1 : s,
+                      dx : dx + s * (w_out - 1) + 1 : s, :]
+            acc += jax.lax.dot_general(
+                rows.reshape(th * w_out, cin), w[dy, dx],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+    out[0] = acc.reshape(th, w_out, out.shape[-1]).astype(out.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "th", "tc", "interpret"),
+)
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+           padding: str | int = "SAME", th: int = 8, tc: int = 128,
+           interpret: bool = True) -> jax.Array:
+    """Pallas dense convolution. NHWC x HWIO -> NHWC.
+
+    Args:
+      x: (N, H, W, Cin).
+      w: (kh, kw, Cin, Cout).
+      stride: spatial stride (1 or 2 used in this repo).
+      padding: "SAME", "VALID" or an explicit symmetric int.
+      th: output rows per tile.  tc: Cout tile width (lane dim, 128 on MXU).
+      interpret: run the kernel body in interpret mode (CPU validation).
+    """
+    n, h, w_in, cin = x.shape
+    kh, kw, _, cout = w.shape
+    s = stride
+    if isinstance(padding, int):
+        ph = pw = (padding, padding)
+    elif padding == "SAME":
+        ph, pw = ((kh - 1) // 2, kh // 2), ((kw - 1) // 2, kw // 2)
+    else:  # VALID
+        ph = pw = (0, 0)
+    h_out = (h + ph[0] + ph[1] - kh) // s + 1
+    w_out = (w_in + pw[0] + pw[1] - kw) // s + 1
+
+    th = min(th, h_out)
+    n_row_tiles = math.ceil(h_out / th)
+    h_out_p = n_row_tiles * th
+    tc = min(tc, cout)
+    n_cout_tiles = math.ceil(cout / tc)
+    cout_p = n_cout_tiles * tc
+
+    # pad input so every tile (incl. the +1 halo tile) reads in-bounds:
+    # rows needed: s*h_out_p + (kh - s) for tiles, plus one extra halo tile.
+    rows_needed = s * h_out_p + max(kh - s, 0) + s * th
+    cols_needed = s * (w_out - 1) + kw
+    xp = jnp.pad(
+        x,
+        ((0, 0), (ph[0], rows_needed - h - ph[0]),
+         (pw[0], cols_needed - w_in - pw[0]), (0, 0)),
+    )
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
+
+    grid = (n, n_row_tiles, n_cout_tiles)
+    x_spec_cur = pl.BlockSpec((1, s * th, cols_needed, cin),
+                              lambda b, i, c: (b, i, 0, 0))
+    x_spec_nxt = pl.BlockSpec((1, s * th, cols_needed, cin),
+                              lambda b, i, c: (b, i + 1, 0, 0))
+    w_spec = pl.BlockSpec((kh, kw, cin, tc), lambda b, i, c: (0, 0, 0, c))
+    out_spec = pl.BlockSpec((1, th, w_out, tc), lambda b, i, c: (b, i, 0, c))
+
+    out = pl.pallas_call(
+        functools.partial(_conv_kernel, th=th, kh=kh, kw=kw, stride=s,
+                          w_out=w_out),
+        grid=grid,
+        in_specs=[x_spec_cur, x_spec_nxt, w_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, h_out_p, w_out, cout_p), x.dtype),
+        interpret=interpret,
+    )(xp, xp, wp)
+    return out[:, :h_out, :, :cout]

@@ -1,0 +1,55 @@
+"""Decomposed dilated-convolution Pallas pipeline (paper §II-B, Fig. 4/8).
+
+TPU-native execution of the paper's input decomposition: the ``d**2`` phase
+blocks are stacked on the *batch* axis by a pure layout transform (XLA
+reshape/transpose — no FLOPs), then ONE dense Pallas convolution processes
+all phases at full MXU occupancy, and the outputs interleave back.  This is
+the phase-batched strategy recorded as a beyond-paper optimization in
+DESIGN.md §2b: where the paper schedules ragged blocks sequentially on PE
+blocks, a wide MXU prefers a single batched dense conv.
+
+The dense conv is the :mod:`repro.kernels.conv2d` Pallas kernel, so the whole
+dilated path runs through the same engine the paper's hardware would use.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import conv2d as _dense_conv
+
+
+@functools.partial(jax.jit, static_argnames=("dilation", "th", "tc", "interpret"))
+def dilated_conv2d(x: jax.Array, w: jax.Array, dilation: int, *, th: int = 8,
+                   tc: int = 128, interpret: bool = True) -> jax.Array:
+    """SAME dilated convolution via phase decomposition + dense Pallas conv.
+
+    Args:
+      x: (N, H, W, Cin).   w: (k, k, Cin, Cout) compact kernel.
+      dilation: step d = D + 1.
+    Returns:
+      (N, H, W, Cout).
+    """
+    d = dilation
+    n, h, w_in, cin = x.shape
+    cout = w.shape[-1]
+    if d == 1:
+        return _dense_conv(x, w, padding="SAME", th=th, tc=tc,
+                           interpret=interpret)
+
+    hp, wp = math.ceil(h / d) * d, math.ceil(w_in / d) * d
+    xpad = jnp.pad(x, ((0, 0), (0, hp - h), (0, wp - w_in), (0, 0)))
+    # phases -> batch: (N, H/d, d, W/d, d, C) -> (d*d*N, H/d, W/d, C)
+    xb = xpad.reshape(n, hp // d, d, wp // d, d, cin)
+    xb = xb.transpose(2, 4, 0, 1, 3, 5).reshape(d * d * n, hp // d, wp // d, cin)
+
+    yb = _dense_conv(xb, w, padding="SAME", th=th, tc=tc, interpret=interpret)
+
+    # batch -> phases, then interleave and crop the pad-up rows/cols
+    yb = yb.reshape(d, d, n, hp // d, wp // d, cout)
+    y = yb.transpose(2, 3, 0, 4, 1, 5).reshape(n, hp, wp, cout)
+    return y[:, :h, :w_in, :]

@@ -1,0 +1,97 @@
+"""Blocked (flash) attention Pallas kernel — LM prefill/training hot-spot.
+
+Online-softmax attention tiled over (batch*heads, q-tiles, kv-tiles) with the
+kv dimension innermost (sequential on TPU).  Running max/denominator and the
+f32 output accumulator live in VMEM scratch across the kv loop; causal
+masking is applied per-tile with broadcasted iotas.
+
+Used by the LM stack when ``config.use_pallas_attention`` is set; the XLA
+einsum path (``ref.attention_ref``) is the default for dry-runs.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q, k, v, out, m_scr, l_scr, acc, *, scale: float,
+                  causal: bool, tq: int, tk: int, seq_k: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc[...] = jnp.zeros_like(acc)
+
+    s = jax.lax.dot_general(
+        q[0].astype(jnp.float32), k[0].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    ) * scale                                           # (tq, tk)
+    if causal:
+        q_pos = qi * tq + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 0)
+        k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+    # mask kv padding beyond the true sequence
+    k_pos = ki * tk + jax.lax.broadcasted_iota(jnp.int32, (tq, tk), 1)
+    s = jnp.where(k_pos < seq_k, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc[...] = acc[...] * alpha + jax.lax.dot_general(
+        p, v[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _done():
+        out[0] = (acc[...] / jnp.maximum(l_scr[...], 1e-30)).astype(out.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "tq", "tk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, tq: int = 128, tk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """(B, H, Sq, D) x (B, H, Sk, D) -> (B, H, Sq, D)."""
+    b, h, sq, dh = q.shape
+    _, _, sk, _ = k.shape
+    scale = dh ** -0.5
+    tq, tk = min(tq, sq), min(tk, sk)
+    sq_p, sk_p = math.ceil(sq / tq) * tq, math.ceil(sk / tk) * tk
+
+    qf = jnp.pad(q.reshape(b * h, sq, dh), ((0, 0), (0, sq_p - sq), (0, 0)))
+    kf = jnp.pad(k.reshape(b * h, sk, dh), ((0, 0), (0, sk_p - sk), (0, 0)))
+    vf = jnp.pad(v.reshape(b * h, sk, dh), ((0, 0), (0, sk_p - sk), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          tq=tq, tk=tk, seq_k=sk),
+        grid=(b * h, sq_p // tq, sk_p // tk),
+        in_specs=[
+            pl.BlockSpec((1, tq, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, tk, dh), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, tk, dh), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tq, dh), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, 1), jnp.float32),   # running max
+            pltpu.VMEM((tq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((tq, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :sq, :].reshape(b, h, sq, dh)

@@ -1,0 +1,61 @@
+"""MXU-tiled matmul Pallas kernel (LM MLP/projection hot-spot).
+
+Classic three-level tiling: grid ``(M/TM, N/TN, K/TK)`` with the K dimension
+innermost (sequential on TPU) accumulating into a VMEM f32 scratch; the
+output block is written on the last K step.  Tiles default to MXU-aligned
+(128) and are clamped for small shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a, b, out, acc):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        a[...], b[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        out[...] = acc[...].astype(out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "interpret"))
+def matmul(a: jax.Array, b: jax.Array, *, tm: int = 128, tn: int = 128,
+           tk: int = 128, interpret: bool = True) -> jax.Array:
+    """(M, K) @ (K, N) -> (M, N) with f32 accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    tm, tn, tk = min(tm, m), min(tn, n), min(tk, k)
+    mp, np_, kp = (math.ceil(m / tm) * tm, math.ceil(n / tn) * tn,
+                   math.ceil(k / tk) * tk)
+    ap = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    bp = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // tm, np_ // tn, kp // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((tk, tn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        # f32 accumulator lives across the sequential K loop
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+        interpret=interpret,
+    )(ap, bp)
+    return out[:m, :n]

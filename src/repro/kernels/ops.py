@@ -1,0 +1,57 @@
+"""Public jit'd wrappers for the Pallas kernels, with shape checks.
+
+These are the entry points the model zoo uses when ``use_pallas`` execution
+is selected; each has a pure-jnp oracle in :mod:`repro.kernels.ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.conv2d import conv2d as _conv2d
+from repro.kernels.dilated_conv import dilated_conv2d as _dilated
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.matmul import matmul as _matmul
+from repro.kernels.transposed_conv import transposed_conv2d as _tconv
+
+
+def conv2d(x, w, *, stride=1, padding="SAME", interpret=True):
+    if x.ndim != 4 or w.ndim != 4 or x.shape[-1] != w.shape[2]:
+        raise ValueError(f"bad conv shapes {x.shape} x {w.shape}")
+    return _conv2d(x, w, stride=stride, padding=padding, interpret=interpret)
+
+
+def dilated_conv2d(x, w, dilation, *, interpret=True):
+    if w.shape[0] != w.shape[1]:
+        raise ValueError("square kernels only")
+    return _dilated(x, w, dilation, interpret=interpret)
+
+
+def transposed_conv2d(x, w, *, stride=2, interpret=True):
+    if stride == 2 and w.shape[0] == w.shape[1] == 3:
+        return _tconv(x, w, interpret=interpret)
+    # general (stride, kernel): composable jnp decomposition path
+    from repro.core.transposed import transposed_conv2d_decomposed
+
+    return transposed_conv2d_decomposed(x, w, stride, (w.shape[0] - 1) // 2, 1)
+
+
+def matmul(a, b, *, interpret=True):
+    if a.shape[-1] != b.shape[0]:
+        raise ValueError(f"bad matmul shapes {a.shape} x {b.shape}")
+    return _matmul(a, b, interpret=interpret)
+
+
+def attention(q, k, v, *, causal=True, interpret=True):
+    if q.shape[-1] != k.shape[-1] or k.shape[:2] != v.shape[:2]:
+        raise ValueError("bad attention shapes")
+    return _flash(q, k, v, causal=causal, interpret=interpret)
+
+
+# oracle aliases so callers can switch implementations uniformly
+conv2d_ref = ref.conv2d_ref
+dilated_conv2d_ref = ref.dilated_conv2d_ref
+transposed_conv2d_ref = ref.transposed_conv2d_ref
+matmul_ref = ref.matmul_ref
+attention_ref = ref.attention_ref

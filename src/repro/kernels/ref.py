@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_DIMS = ("NHWC", "HWIO", "NHWC")
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 1,
+               padding: str | int = "SAME") -> jax.Array:
+    """Dense 2-D convolution oracle. NHWC x HWIO -> NHWC, f32 accumulation."""
+    if isinstance(padding, int):
+        pad = [(padding, padding), (padding, padding)]
+    elif padding == "SAME":
+        kh, kw = w.shape[0], w.shape[1]
+        pad = [((kh - 1) // 2, kh // 2), ((kw - 1) // 2, kw // 2)]
+    else:
+        pad = padding
+    return lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=pad,
+        dimension_numbers=_DIMS, preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def dilated_conv2d_ref(x: jax.Array, w: jax.Array, dilation: int) -> jax.Array:
+    """SAME dilated convolution oracle (rhs_dilation)."""
+    k = w.shape[0]
+    pad = (dilation * (k - 1)) // 2
+    return lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=[(pad, pad), (pad, pad)],
+        rhs_dilation=(dilation, dilation), dimension_numbers=_DIMS,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def transposed_conv2d_ref(x: jax.Array, w: jax.Array, stride: int = 2,
+                          padding: int = 1, output_padding: int = 1) -> jax.Array:
+    """Transposed convolution oracle (lhs_dilation)."""
+    p_lo, p_hi = padding, padding + output_padding
+    return lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding=[(p_lo, p_hi), (p_lo, p_hi)],
+        lhs_dilation=(stride, stride), dimension_numbers=_DIMS,
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True) -> jax.Array:
+    """(B, H, S, D) attention oracle with f32 softmax."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

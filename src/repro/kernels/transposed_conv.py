@@ -1,0 +1,104 @@
+"""Decomposed transposed-convolution Pallas kernel (paper §II-C, Fig. 6/9).
+
+Implements the paper's weight decomposition for the stride-2, 3x3 case used
+throughout ENet's decoder: the kernel computes all four parity sub-
+convolutions (center 1x1, horizontal 1x2, vertical 2x1, corners 2x2) in a
+single pass over each input tile — the TPU analogue of Fig. 9's schedule
+where all nine weights share one input broadcast.  No zero-inserted input is
+ever materialised; MACs issued == nonzero MACs.
+
+Output is produced as four parity planes ``(N, 4, H, W, Cout)`` and
+interleaved into ``(N, 2H, 2W, Cout)`` by a reshape/transpose in the wrapper
+(a layout op on TPU).
+
+General (stride, kernel) combinations fall back to the composable jnp path in
+``repro.core.transposed``; ENet only uses this fused case.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tconv_kernel(x_cur, x_nxt, w, out, *, th: int, w_in: int):
+    """Fused 4-parity step: s=2, k=3, p=1, output_padding=1.
+
+    Parity equations (b, c index the input tile; halo row/col +1):
+      out[2b,   2c  ] = w[1,1] x[b, c]
+      out[2b,   2c+1] = w[1,0] x[b, c] + w[1,2] x[b, c+1]
+      out[2b+1, 2c  ] = w[0,1] x[b, c] + w[2,1] x[b+1, c]
+      out[2b+1, 2c+1] = w[0,0] x[b,c] + w[0,2] x[b,c+1]
+                      + w[2,0] x[b+1,c] + w[2,2] x[b+1,c+1]
+    """
+    xw = jnp.concatenate([x_cur[0], x_nxt[0][:1]], axis=0)  # (th+1, w_in+1, cin)
+    cin = xw.shape[-1]
+    tc = out.shape[-1]
+
+    def tap(dy, dx, wt):
+        rows = xw[dy : dy + th, dx : dx + w_in, :]
+        return jax.lax.dot_general(
+            rows.reshape(th * w_in, cin), wt, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    ee = tap(0, 0, w[1, 1])
+    eo = tap(0, 0, w[1, 0]) + tap(0, 1, w[1, 2])
+    oe = tap(0, 0, w[0, 1]) + tap(1, 0, w[2, 1])
+    oo = (tap(0, 0, w[0, 0]) + tap(0, 1, w[0, 2])
+          + tap(1, 0, w[2, 0]) + tap(1, 1, w[2, 2]))
+    planes = jnp.stack([ee, eo, oe, oo], axis=0)  # (4, th*w_in, tc)
+    out[0] = planes.reshape(4, th, w_in, tc).astype(out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("th", "tc", "interpret"))
+def transposed_conv2d(x: jax.Array, w: jax.Array, *, th: int = 8,
+                      tc: int = 128, interpret: bool = True) -> jax.Array:
+    """Fused decomposed transposed conv: s=2, k=3, padding=1, out_pad=1.
+
+    Args:
+      x: (N, H, W, Cin).   w: (3, 3, Cin, Cout).
+    Returns:
+      (N, 2H, 2W, Cout).
+    """
+    n, h, w_in, cin = x.shape
+    kh, kw, _, cout = w.shape
+    if (kh, kw) != (3, 3):
+        raise ValueError("fused kernel covers the paper's 3x3/s2 case")
+
+    th = min(th, h)
+    n_row_tiles = math.ceil(h / th)
+    h_p = n_row_tiles * th
+    tc = min(tc, cout)
+    n_cout_tiles = math.ceil(cout / tc)
+    cout_p = n_cout_tiles * tc
+
+    # halo: +1 row (via next-tile concat) and +1 col (padded); plus one extra
+    # row tile so the next-tile BlockSpec stays in bounds.
+    xp = jnp.pad(x, ((0, 0), (0, h_p - h + th), (0, 1), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
+
+    grid = (n, n_row_tiles, n_cout_tiles)
+    x_cur = pl.BlockSpec((1, th, w_in + 1, cin), lambda b, i, c: (b, i, 0, 0))
+    x_nxt = pl.BlockSpec((1, th, w_in + 1, cin), lambda b, i, c: (b, i + 1, 0, 0))
+    w_spec = pl.BlockSpec((3, 3, cin, tc), lambda b, i, c: (0, 0, 0, c))
+    out_spec = pl.BlockSpec((1, 4, th, w_in, tc), lambda b, i, c: (b, 0, i, 0, c))
+
+    planes = pl.pallas_call(
+        functools.partial(_tconv_kernel, th=th, w_in=w_in),
+        grid=grid,
+        in_specs=[x_cur, x_nxt, w_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, 4, h_p, w_in, cout_p), x.dtype),
+        interpret=interpret,
+    )(xp, xp, wp)
+
+    planes = planes[:, :, :h, :, :cout]                    # (N, 4, H, W, C)
+    # interleave parities: out[n, 2b+ry, 2c+rx] = planes[n, 2*ry+rx, b, c]
+    planes = planes.reshape(n, 2, 2, h, w_in, cout)
+    out = planes.transpose(0, 3, 1, 4, 2, 5).reshape(n, 2 * h, 2 * w_in, cout)
+    return out

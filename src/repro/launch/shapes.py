@@ -1,0 +1,79 @@
+"""Assigned input-shape cells and their abstract input specs.
+
+Every (architecture x shape) pair is a *cell*; ``input_specs`` returns
+weak-type-correct ShapeDtypeStructs (no allocation) for the step function the
+cell lowers:
+
+  * ``train_4k``    -> train_step   (tokens/labels/mask)
+  * ``prefill_32k`` -> prefill_step (tokens -> logits + caches)
+  * ``decode_32k``  -> serve_step   (1 new token, KV cache of seq_len)
+  * ``long_500k``   -> serve_step   (sub-quadratic archs only)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(supported, reason-if-not) per DESIGN.md §4."""
+    cell = SHAPES[shape]
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return False, ("pure full-attention config: a 500k dense KV per layer "
+                       "has no published sparsity mechanism for this arch")
+    if cell.kind == "decode" and not cfg.decode_supported:
+        return False, "encoder-only architecture has no decode step"
+    return True, ""
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Abstract model inputs for the cell (ShapeDtypeStruct stand-ins)."""
+    cell = SHAPES[shape]
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        specs = {
+            "tokens": _i32((b, s)),
+            "labels": _i32((b, s)),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+        if cfg.encoder_layers:  # stub modality frontend: frame embeddings
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_ctx, cfg.d_model), jnp.float32)
+        return specs
+    if cell.kind == "prefill":
+        specs = {"tokens": _i32((b, s))}
+        if cfg.encoder_layers:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_ctx, cfg.d_model), jnp.float32)
+        return specs
+    # decode: one new token against a seq_len KV cache
+    specs = {"token": _i32((b, 1)), "cache_pos": _i32(())}
+    if cfg.encoder_layers:
+        specs["enc_out"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_ctx, cfg.d_model), jnp.dtype(cfg.dtype))
+    return specs

@@ -1,0 +1,222 @@
+"""Step-function builders: train_step / prefill_step / serve_step per config.
+
+Each builder returns ``(fn, in_specs, in_shardings, out_shardings)`` ready
+for ``jax.jit(fn, in_shardings=...).lower(*specs)`` — used identically by the
+dry-run (abstract) and the real train/serve loops (concrete).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.launch.shapes import SHAPES, input_specs
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import chunked_softmax_ce, softmax_cross_entropy
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+# KV/state-cache sharding rules by leaf name (trailing dims after the stacked
+# (repeat,) axis).  Resolution applies divisibility + axis-reuse guards.
+_CACHE_RULES = {
+    "k": (None, "data_kvseq", "kvseq", "model_kv", None),
+    "v": (None, "data_kvseq", "kvseq", "model_kv", None),
+    "conv": (None, "data", None, "model"),
+    "ssm": (None, "data", "model", None),
+    "C": (None, "data", "model", None, None),
+    "n": (None, "data", "model", None),
+    "m": (None, "data", "model"),
+    "c": (None, "data", "model"),
+    "h": (None, "data", "model"),
+}
+
+
+def cache_shardings(mesh, caches_abstract):
+    def leaf(path, x):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        logical = _CACHE_RULES.get(name, (None,) * x.ndim)
+        logical = logical[:x.ndim]
+        logical = (None,) * (x.ndim - len(logical)) + tuple(logical)
+        return NamedSharding(mesh, shd.resolve_spec(mesh, logical, x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, caches_abstract)
+
+
+def _model_fns(cfg: ModelConfig):
+    if cfg.encoder_layers:
+        return encdec
+    return transformer
+
+
+def abstract_state(cfg: ModelConfig):
+    """(abstract params, abstract optimizer state) — no allocation."""
+    mod = _model_fns(cfg)
+    params = mod.init_abstract(cfg)
+    opt = jax.eval_shape(lambda p: adamw_init(
+        p, memory_mode=cfg.opt_memory_mode), params)
+    return params, opt
+
+
+def make_train_step(cfg: ModelConfig, *, lr_peak: float = 3e-4,
+                    warmup: int = 2000, total_steps: int = 100_000,
+                    microbatches: int = 1):
+    """Microbatched (grad-accumulation) train step.
+
+    ``microbatches > 1`` scans the global batch in slices, accumulating f32
+    gradients sharded like the parameters — activation memory scales 1/M and
+    the gradient all-reduce still happens once per step.
+    """
+    mod = _model_fns(cfg)
+
+    def loss_fn(p, mb):
+        if cfg.encoder_layers:
+            logits = mod.forward(p, mb["tokens"], mb["frames"], cfg)
+            return softmax_cross_entropy(logits, mb["labels"], mb["mask"])
+        hidden = mod.forward(p, mb["tokens"], cfg, return_hidden=True)
+        return chunked_softmax_ce(hidden, mod.lm_head(p, cfg),
+                                  mb["labels"], mb["mask"])
+
+    # grad-accumulation dtype follows the optimizer memory mode: bf16-state
+    # models (398B Jamba) also accumulate in bf16 — halves the accumulator
+    # footprint and the cross-pod gradient all-reduce wire.
+    acc_dtype = jnp.bfloat16 if cfg.opt_memory_mode == "bf16" else jnp.float32
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def body(acc, mb):
+                acc_g, acc_l = acc
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), acc_g, g)
+                return (acc_g, acc_l + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.float32(0)),
+                                           micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        lr = cosine_schedule(opt_state.step, warmup, total_steps, lr_peak)
+        new_params, new_opt, gnorm = adamw_update(grads, opt_state, params,
+                                                  lr=lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    mod = _model_fns(cfg)
+
+    def prefill_step(params, batch):
+        if cfg.encoder_layers:
+            return mod.forward(params, batch["tokens"], batch["frames"], cfg)
+        return mod.forward(params, batch["tokens"], cfg)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, caches, token, pos) -> (token', caches')."""
+
+    def serve_step(params, caches, batch):
+        token, pos = batch["token"], batch["cache_pos"]
+        if cfg.encoder_layers:
+            logits, new_caches = encdec.decode_step(
+                params, token, batch["enc_out"], caches, pos, cfg)
+        else:
+            logits, new_caches = transformer.decode_step(
+                params, token, caches, pos, cfg)
+        next_token = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return next_token.astype(jnp.int32), new_caches
+
+    return serve_step
+
+
+def default_microbatches(cfg: ModelConfig) -> int:
+    """Grad-accumulation depth scaled to model size (activation pressure)."""
+    total = cfg.param_counts()["total"]
+    if total > 100e9:
+        return 8
+    if total > 20e9:
+        return 4
+    return 2
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, mesh, *,
+               include_opt: bool = True, microbatches: int | None = None):
+    """Lower the cell's step on ``mesh``; returns (lowered, aux dict)."""
+    if microbatches is None:
+        microbatches = default_microbatches(cfg)
+    cell = SHAPES[shape_name]
+    specs = input_specs(cfg, shape_name)
+    params_a = _model_fns(cfg).init_abstract(cfg)
+    p_sh = shd.make_param_shardings(mesh, params_a)
+    batch_leaf_sh = {
+        k: NamedSharding(mesh, shd.resolve_spec(
+            mesh, ("data",) + (None,) * (v.ndim - 1), v.shape))
+        for k, v in specs.items()
+    }
+    rep = NamedSharding(mesh, P())
+
+    with shd.use_mesh(mesh):
+        if cell.kind == "train":
+            opt_a = jax.eval_shape(lambda p: adamw_init(
+                p, memory_mode=cfg.opt_memory_mode), params_a)
+            o_sh = _opt_shardings(mesh, opt_a, p_sh)
+            fn = make_train_step(cfg, microbatches=microbatches)
+            jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, batch_leaf_sh),
+                             out_shardings=(p_sh, o_sh,
+                                            {"loss": rep, "grad_norm": rep,
+                                             "lr": rep}),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_a, opt_a, specs)
+            return lowered, {"params": params_a, "opt": opt_a}
+        if cell.kind == "prefill":
+            fn = make_prefill_step(cfg)
+            jitted = jax.jit(fn, in_shardings=(p_sh, batch_leaf_sh))
+            lowered = jitted.lower(params_a, specs)
+            return lowered, {"params": params_a}
+        # decode
+        if cfg.encoder_layers:
+            caches_a = jax.eval_shape(
+                lambda: encdec.init_caches(cfg, cell.global_batch,
+                                           cell.seq_len))
+        else:
+            caches_a = jax.eval_shape(
+                lambda: transformer.init_caches(cfg, cell.global_batch,
+                                                cell.seq_len))
+        c_sh = cache_shardings(mesh, caches_a)
+        fn = make_serve_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, batch_leaf_sh),
+                         out_shardings=(batch_leaf_sh["token"], c_sh),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_a, caches_a, specs)
+        return lowered, {"params": params_a, "caches": caches_a}
+
+
+def _opt_shardings(mesh, opt_abstract, param_shardings):
+    """Optimizer state shardings: master/moments mirror the params."""
+    rep = NamedSharding(mesh, P())
+    from repro.optim.adamw import AdamWState
+
+    return AdamWState(
+        step=rep,
+        master=None if opt_abstract.master is None else param_shardings,
+        mu=param_shardings,
+        nu=param_shardings,
+    )

@@ -1,0 +1,159 @@
+"""Production train loop: pjit step, checkpoint/restart, failure recovery,
+straggler watchdog, grad accumulation — runs the same code path from 1 CPU
+device to the 512-chip mesh.
+
+Usage (CPU-scale example; examples/train_enet.py covers the paper workload):
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --reduced --steps 20 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config, get_reduced
+from repro.data import LMDataPipeline
+from repro.distributed import sharding as shd
+from repro.distributed.fault_tolerance import (FailureInjector, Heartbeat,
+                                               StragglerWatchdog)
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.steps import make_train_step
+from repro.models import encdec, transformer
+from repro.optim import adamw_init
+
+
+def train(cfg, *, steps: int, global_batch: int, seq_len: int,
+          ckpt_dir: str | None = None, ckpt_every: int = 10,
+          mesh=None, injector: FailureInjector | None = None,
+          log_every: int = 1) -> dict:
+    """Returns final metrics; restartable + failure-tolerant."""
+    mesh = mesh or make_smoke_mesh()
+    mod = encdec if cfg.encoder_layers else transformer
+
+    with shd.use_mesh(mesh):
+        params_a = mod.init_abstract(cfg)
+        p_sh = shd.make_param_shardings(mesh, params_a)
+        rep = NamedSharding(mesh, P())
+
+        def init_all(key):
+            params = mod.init_params(key, cfg)
+            return params, adamw_init(params, memory_mode=cfg.opt_memory_mode)
+
+        from repro.launch.steps import _opt_shardings
+        opt_a = jax.eval_shape(lambda p: adamw_init(
+                p, memory_mode=cfg.opt_memory_mode), params_a)
+        o_sh = _opt_shardings(mesh, opt_a, p_sh)
+
+        init_jit = jax.jit(init_all, out_shardings=(p_sh, o_sh))
+
+        step_fn = make_train_step(cfg, warmup=max(2, steps // 10),
+                                  total_steps=steps)
+        batch_sh = {
+            "tokens": shd.batch_sharding(mesh, 2),
+            "labels": shd.batch_sharding(mesh, 2),
+            "mask": shd.batch_sharding(mesh, 2),
+        }
+        if cfg.encoder_layers:
+            batch_sh["frames"] = shd.batch_sharding(mesh, 3)
+        train_jit = jax.jit(
+            step_fn, in_shardings=(p_sh, o_sh, batch_sh),
+            out_shardings=(p_sh, o_sh,
+                           {"loss": rep, "grad_norm": rep, "lr": rep}),
+            donate_argnums=(0, 1))
+
+        pipe = LMDataPipeline(global_batch, seq_len, cfg.vocab)
+        watchdog = StragglerWatchdog()
+        heart = Heartbeat(ckpt_dir or "/tmp/repro_hb")
+
+        start = 0
+        if ckpt_dir and (s := latest_step(ckpt_dir)) is not None:
+            params, opt_state = restore_checkpoint(
+                ckpt_dir, s, (params_a, opt_a), (p_sh, o_sh))
+            start = s
+            pipe.seek(start)
+            print(f"[train] restored checkpoint at step {s}", flush=True)
+        else:
+            params, opt_state = init_jit(jax.random.PRNGKey(0))
+
+        ckpt_thread = None
+        metrics = {}
+        step = start
+        while step < steps:
+            try:
+                got_step, np_batch = next(pipe)
+                if cfg.encoder_layers:
+                    np_batch["frames"] = np.zeros(
+                        (global_batch, cfg.encoder_ctx, cfg.d_model),
+                        np.float32)
+                batch = jax.device_put(np_batch, batch_sh)
+                if injector is not None:
+                    injector.maybe_fail(got_step)
+                t0 = time.time()
+                params, opt_state, metrics = train_jit(params, opt_state,
+                                                       batch)
+                metrics = jax.device_get(metrics)
+                dt = time.time() - t0
+                slow = watchdog.observe(got_step, dt)
+                heart.beat(got_step)
+                step = got_step + 1
+                if got_step % log_every == 0:
+                    print(f"[train] step={got_step} loss={metrics['loss']:.4f}"
+                          f" gnorm={metrics['grad_norm']:.3f} dt={dt*1e3:.0f}ms"
+                          f"{' STRAGGLER' if slow else ''}", flush=True)
+                if ckpt_dir and step % ckpt_every == 0:
+                    if ckpt_thread is not None:
+                        ckpt_thread.join()
+                    ckpt_thread = save_checkpoint(
+                        ckpt_dir, step, (params, opt_state), background=True)
+            except RuntimeError as e:
+                # node failure path: restore newest checkpoint and resume
+                print(f"[train] FAILURE: {e}; recovering", flush=True)
+                if not ckpt_dir:
+                    raise
+                if ckpt_thread is not None:
+                    ckpt_thread.join()
+                    ckpt_thread = None
+                s = latest_step(ckpt_dir)
+                if s is None:
+                    params, opt_state = init_jit(jax.random.PRNGKey(0))
+                    step = 0
+                else:
+                    params, opt_state = restore_checkpoint(
+                        ckpt_dir, s, (params_a, opt_a), (p_sh, o_sh))
+                    step = s
+                pipe.seek(step)
+        if ckpt_thread is not None:
+            ckpt_thread.join()
+        pipe.close()
+        metrics["stragglers"] = len(watchdog.flagged)
+        metrics["final_step"] = step
+        return metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    out = train(cfg, steps=args.steps, global_batch=args.batch,
+                seq_len=args.seq, ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every)
+    print(f"[train] done: {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Attention: MHA/GQA with RoPE, optional qk-norm and sliding window.
+
+Execution contexts:
+  * training / prefill: causal (or windowed) attention, **query-chunked** via
+    ``lax.scan`` so the score matrix never materialises at (S, S) — the
+    live transient is (B, H, TQ, S) per chunk.  This is what lets the 32k
+    prefill cells fit HBM in the dry-run; the Pallas flash kernel
+    (:mod:`repro.kernels.flash_attention`) is the TPU-native equivalent for
+    real execution.
+  * decode: single-token query against a KV cache (ring buffer of ``window``
+    entries for local layers -> a 500k decode holds only ``window`` keys on
+    Gemma-style local layers).
+  * cross-attention (``xa`` given): non-causal over encoder output.
+
+Head layout is merged (B, S, H, Dh) with KV repeated to full heads for GQA so
+the head axis shards cleanly over the ``model`` mesh axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, lc, rmsnorm, rmsnorm_init, rope
+
+NEG_INF = -2.3819763e38
+Q_CHUNK = 512  # query-chunk size for long-sequence attention
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.bfloat16, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, cfg.num_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str,
+                  dtype=jnp.bfloat16) -> dict:
+    size = min(max_len, cfg.window) if (kind == "attn_local" and cfg.window) \
+        else max_len
+    shape = (batch, size, cfg.kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, T, KVH, Dh) -> (B, T, KVH*groups, Dh)."""
+    if groups == 1:
+        return k
+    b, t, kvh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, kvh, groups, hd)
+                            ).reshape(b, t, kvh * groups, hd)
+
+
+def _softmax_attend(q, k, v, mask):
+    """q (B,H,TQ,Dh), k/v (B,H,T,Dh), mask (B,1|H,TQ,T) -> (B,H,TQ,Dh)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhtd->bhqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqt,bhtd->bhqd", p, v.astype(jnp.float32))
+
+
+def _chunked_causal(q, k, v, positions, window: int):
+    """Query-chunked causal attention.  q/k/v: (B, H, S, Dh)."""
+    b, h, s, hd = q.shape
+    tq = Q_CHUNK if s % Q_CHUNK == 0 and s > Q_CHUNK else s
+    n_chunks = s // tq
+    kpos = positions[:, None, None, :]                      # (B,1,1,S)
+
+    if n_chunks == 1:
+        qpos = positions[:, None, :, None]
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        return _softmax_attend(q, k, v, mask).astype(q.dtype)
+
+    qc = q.reshape(b, h, n_chunks, tq, hd).transpose(2, 0, 1, 3, 4)
+    pc = positions.reshape(b, n_chunks, tq).transpose(1, 0, 2)
+
+    # checkpointed per-chunk body: the (TQ, S) score/mask tiles are
+    # rematerialised in backward, never stacked across chunks.
+    @jax.checkpoint
+    def body(_, blk):
+        qb, pb = blk                                        # (B,H,TQ,Dh), (B,TQ)
+        qpos = pb[:, None, :, None]
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        return None, _softmax_attend(qb, k, v, mask).astype(qb.dtype)
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    out = out.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd)
+    return out.astype(q.dtype)
+
+
+def attention(p: dict, x: jax.Array, cfg: ModelConfig, *, kind: str = "attn",
+              positions: jax.Array | None = None, kv_cache: dict | None = None,
+              cache_pos: jax.Array | None = None, causal: bool = True,
+              xa: jax.Array | None = None) -> tuple[jax.Array, dict | None]:
+    """Returns (output, updated_kv_cache).  x: (B, S, D)."""
+    b, s, _ = x.shape
+    nh, kvh, hd = cfg.num_heads, cfg.kv_heads, cfg.head_dim
+    groups = nh // kvh
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s)) \
+            if cache_pos is None else jnp.full((b, 1), 0, jnp.int32) + cache_pos
+
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+    kv_src = x if xa is None else xa
+    sk = kv_src.shape[1]
+    k = (kv_src @ p["wk"]).reshape(b, sk, kvh, hd)
+    v = (kv_src @ p["wv"]).reshape(b, sk, kvh, hd)
+
+    if cfg.qk_norm and "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if xa is None and cfg.rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None and xa is None:
+        size = kv_cache["k"].shape[1]
+        idx = jnp.mod(cache_pos, size) if (kind == "attn_local" and cfg.window
+                                           ) else cache_pos
+        ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, idx, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        # sequence axis of the cache shards over 'data' (batch=1 long-decode)
+        k = lc(ck, ("data_kvseq", "kvseq", None, None))
+        v = lc(cv, ("data_kvseq", "kvseq", None, None))
+        sk = size
+
+    kf = _repeat_kv(k, groups).transpose(0, 2, 1, 3)     # (B, H, T, Dh)
+    vf = _repeat_kv(v, groups).transpose(0, 2, 1, 3)
+    qf = q.transpose(0, 2, 1, 3)                          # (B, H, S, Dh)
+    qf = lc(qf, ("data", "model", None, None))
+    if kv_cache is None:
+        kf = lc(kf, ("data", "model", None, None))
+        vf = lc(vf, ("data", "model", None, None))
+
+    if kv_cache is not None and xa is None:
+        slot = jnp.arange(sk)
+        if kind == "attn_local" and cfg.window and sk <= cfg.window:
+            valid = slot[None, :] < jnp.minimum(cache_pos + 1, sk)
+        else:
+            valid = slot[None, :] <= cache_pos
+        mask = valid[:, None, None, :]                    # (1,1,1,T)
+        out = _softmax_attend(qf, kf, vf, mask).astype(x.dtype)
+    elif xa is not None or not causal:
+        mask = jnp.ones((1, 1, 1, sk), bool)
+        out = _softmax_attend(qf, kf, vf, mask).astype(x.dtype)
+    else:
+        win = cfg.window if kind == "attn_local" else 0
+        out = _chunked_causal(qf, kf, vf, positions, win)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    out = lc(out, ("data", None, "model"))
+    return out @ p["wo"], new_cache

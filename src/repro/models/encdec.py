@@ -1,0 +1,143 @@
+"""Whisper-style encoder-decoder transformer.
+
+Per the assignment spec the conv/audio frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings (B, T_frames, D).  (The actual Whisper
+conv frontend — two 1-D convs — can be built from ``repro.core.decompose``;
+see ``examples/whisper_frontend_demo.py``.)  Encoder: bidirectional
+self-attention.  Decoder: causal self-attention + cross-attention + FFN.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (dense_init, layernorm, layernorm_init, lc,
+                                 mlp, mlp_init, rmsnorm, rmsnorm_init)
+
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attn_mod.attn_init(k1, cfg, dtype),
+        "ffn": mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_attn": attn_mod.attn_init(k1, cfg, dtype),
+        "cross_attn": attn_mod.attn_init(k2, cfg, dtype, cross=True),
+        "ffn": mlp_init(k3, cfg.d_model, cfg.d_ff, dtype),
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+        "norm3": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    n_enc, n_dec = cfg.encoder_layers, cfg.num_layers
+    keys = jax.random.split(key, n_enc + n_dec + 4)
+    enc = [_enc_layer_init(keys[i], cfg, dtype) for i in range(n_enc)]
+    dec = [_dec_layer_init(keys[n_enc + i], cfg, dtype) for i in range(n_dec)]
+    return {
+        "embed": (jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * cfg.d_model ** -0.5
+                  ).astype(dtype),
+        "enc_pos": (jax.random.normal(keys[-2], (cfg.encoder_ctx, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype),
+        "enc_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "dec_blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "dec_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(keys[-3], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def init_abstract(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, T, D) precomputed frontend embeddings (stub)."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None, :frames.shape[1]]
+    x = lc(x, ("data", "seq", None))
+
+    def body(x, p):
+        h, _ = attn_mod.attention(p["attn"], rmsnorm(p["norm1"], x,
+                                                     cfg.norm_eps),
+                                  cfg, causal=False)
+        x = x + h
+        x = x + mlp(p["ffn"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+        return x, None
+
+    if cfg.remat:
+        from repro.models.transformer import remat_policy
+        body = jax.checkpoint(body, policy=remat_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _dec_layer(p, x, enc_out, cfg, positions, cache=None, cache_pos=None):
+    h, nc = attn_mod.attention(p["self_attn"], rmsnorm(p["norm1"], x,
+                                                       cfg.norm_eps),
+                               cfg, positions=positions, kv_cache=cache,
+                               cache_pos=cache_pos)
+    x = x + h
+    h, _ = attn_mod.attention(p["cross_attn"], rmsnorm(p["norm2"], x,
+                                                       cfg.norm_eps),
+                              cfg, xa=enc_out)
+    x = x + h
+    x = x + mlp(p["ffn"], rmsnorm(p["norm3"], x, cfg.norm_eps))
+    x = lc(x, ("data", "seq", None))
+    return x, nc
+
+
+def forward(params: dict, tokens: jax.Array, frames: jax.Array,
+            cfg: ModelConfig) -> jax.Array:
+    """Teacher-forced training forward -> logits (B, S, V)."""
+    enc_out = encode(params, frames, cfg)
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(x, p):
+        y, _ = _dec_layer(p, x, enc_out, cfg, positions)
+        return y, None
+
+    if cfg.remat:
+        from repro.models.transformer import remat_policy
+        body = jax.checkpoint(body, policy=remat_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return lc(logits, ("data", None, "model"))
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    one = attn_mod.init_kv_cache(cfg, batch, max_len, "attn",
+                                 jnp.dtype(cfg.dtype))
+    return jax.tree.map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
+
+
+def decode_step(params: dict, token: jax.Array, enc_out: jax.Array,
+                caches: dict, cache_pos: jax.Array, cfg: ModelConfig):
+    """One decode step with self-attn KV cache + cross-attn to enc_out."""
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+
+    def body(x, rep):
+        p, cache = rep
+        y, nc = _dec_layer(p, x, enc_out, cfg, None, cache=cache,
+                           cache_pos=cache_pos)
+        return y, nc
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches))
+    x = rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    return x @ params["lm_head"], new_caches

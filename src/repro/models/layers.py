@@ -1,0 +1,135 @@
+"""Shared neural-net building blocks (pure-JAX, functional, dict params).
+
+Every module is an ``init(key, ...) -> params`` / ``apply(params, x, ...)``
+pair.  Parameters are plain pytrees; sharding is attached later by logical
+rules over tree paths (``repro.distributed.sharding``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# logical sharding constraint hook — installed by repro.distributed.sharding;
+# identity when no mesh context is active (single-device smoke tests).
+_CONSTRAINT_FN = None
+DISABLE_SEQ_SP = False  # perf-ablation knob (launch.perf variant "nosp")
+
+
+def set_constraint_fn(fn) -> None:
+    global _CONSTRAINT_FN
+    _CONSTRAINT_FN = fn
+
+
+def lc(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+    """Apply a logical sharding constraint (no-op outside a mesh context)."""
+    if _CONSTRAINT_FN is None:
+        return x
+    if DISABLE_SEQ_SP and "seq" in axes:
+        axes = tuple(None if a == "seq" else a for a in axes)
+    return _CONSTRAINT_FN(x, axes)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               scale: float | None = None) -> jax.Array:
+    scale = (d_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(g: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * g
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16) -> dict:
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * p["g"]
+            + p["b"])
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP ---
+
+def mlp_init(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU feed-forward."""
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = lc(h, ("data", None, "model"))
+    return h @ p["w_down"]
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Token-mean cross entropy; logits may be sharded on the vocab axis."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_softmax_ce(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                       mask: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross entropy without ever materialising full (B, S, V) logits.
+
+    Scans sequence chunks; each chunk's logits are rematerialised in the
+    backward pass (jax.checkpoint), so peak memory is one chunk's logits —
+    the standard large-vocab trick (262k-vocab Gemma at 4k seq would
+    otherwise dominate the training footprint).
+    """
+    b, s, d = hidden.shape
+    if s % chunk != 0 or s <= chunk:
+        logits = hidden @ head
+        return softmax_cross_entropy(logits, labels, mask)
+    nc = s // chunk
+    hs = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, blk):
+        h, l, m = blk
+        logits = (h @ head).astype(jnp.float32)
+        logits = lc(logits, ("data", None, "model"))
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        nll_sum, m_sum = carry
+        return (nll_sum + jnp.sum((logz - gold) * m), m_sum + jnp.sum(m)), None
+
+    (nll, msum), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                  (hs, ls, ms))
+    return nll / jnp.maximum(msum, 1.0)

@@ -1,0 +1,229 @@
+"""Decoder-only LM assembly: superblock scan over heterogeneous layer stacks.
+
+The layer stack is ``repeat`` copies of ``cfg.block_pattern`` (e.g. Jamba's
+``(mamba, mamba, mamba, attn, mamba, mamba, mamba, mamba)``); parameters are
+stacked on a leading ``repeat`` axis per pattern position, and the stack runs
+as ONE ``lax.scan`` over superblocks — compact HLO regardless of depth, which
+keeps 512-device dry-run compiles fast and lets the XLA latency-hiding
+scheduler pipeline per-layer collectives.
+
+Each layer = sequence mixer (attn / mamba / mlstm / slstm) + FFN
+(dense / MoE / none), both pre-norm residual.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.config import ModelConfig
+from repro.models.layers import (dense_init, lc, mlp, mlp_init, rmsnorm,
+                                 rmsnorm_init)
+
+
+def remat_policy(cfg: ModelConfig):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _ffn_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    if cfg.moe is not None and (layer_idx + 1) % cfg.moe.every_n_layers == 0:
+        return "moe"
+    if cfg.d_ff > 0:
+        return "dense"
+    return "none"
+
+
+def _mixer_init(key, cfg: ModelConfig, kind: str, dtype):
+    if kind in ("attn", "attn_local"):
+        return attn_mod.attn_init(key, cfg, dtype)
+    if kind == "mamba":
+        return mamba_mod.mamba_init(key, cfg, dtype)
+    if kind == "mlstm":
+        return xlstm_mod.mlstm_init(key, cfg, dtype)
+    if kind == "slstm":
+        return xlstm_mod.slstm_init(key, cfg, dtype)
+    raise ValueError(kind)
+
+
+def layer_init(key, cfg: ModelConfig, pattern_idx: int, layer_idx: int,
+               dtype) -> dict:
+    kind = cfg.block_pattern[pattern_idx]
+    k1, k2 = jax.random.split(key)
+    p = {
+        "mixer": _mixer_init(k1, cfg, kind, dtype),
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    fk = _ffn_kind(cfg, layer_idx)
+    if fk == "moe":
+        p["ffn"] = moe_mod.moe_init(k2, cfg, dtype)
+    elif fk == "dense":
+        p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    """Parameters with per-pattern-position stacks of shape (repeat, ...)."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 3 + cfg.num_layers)
+    blocks = []
+    for pi in range(len(cfg.block_pattern)):
+        per_repeat = []
+        for r in range(cfg.repeat):
+            li = r * len(cfg.block_pattern) + pi
+            per_repeat.append(layer_init(keys[3 + li], cfg, pi, li, dtype))
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_repeat))
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * cfg.d_model ** -0.5
+                  ).astype(dtype),
+        "blocks": blocks,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], cfg.d_model, cfg.vocab, dtype)
+    return params
+
+
+def init_abstract(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree with the same structure (dry-run, no alloc)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def apply_layer(p: dict, x: jax.Array, cfg: ModelConfig, kind: str,
+                ffn_kind: str, positions, cache=None, cache_pos=None):
+    """One (mixer + FFN) layer.  Returns (y, new_cache)."""
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        mixed, new_cache = attn_mod.attention(
+            p["mixer"], h, cfg, kind=kind, positions=positions,
+            kv_cache=cache, cache_pos=cache_pos)
+    elif kind == "mamba":
+        mixed, new_cache = mamba_mod.mamba_block(p["mixer"], h, cfg,
+                                                 cache=cache)
+    elif kind == "mlstm":
+        mixed, new_cache = xlstm_mod.mlstm_block(p["mixer"], h, cfg,
+                                                 cache=cache)
+    elif kind == "slstm":
+        mixed, new_cache = xlstm_mod.slstm_block(p["mixer"], h, cfg,
+                                                 cache=cache)
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+    if ffn_kind == "moe":
+        x = x + moe_mod.moe_ffn(p["ffn"], rmsnorm(p["norm2"], x, cfg.norm_eps),
+                                cfg)
+    elif ffn_kind == "dense":
+        x = x + mlp(p["ffn"], rmsnorm(p["norm2"], x, cfg.norm_eps))
+    # sequence-parallel residual stream: the per-layer saved activation is
+    # 1/model_size of the full (B, S, D) tensor (Megatron-SP layout).
+    x = lc(x, ("data", "seq", None))
+    return x, new_cache
+
+
+def _superblock(cfg: ModelConfig, block_params: list, x, positions,
+                caches=None, cache_pos=None, first_layer_idx: int = 0):
+    """Apply one copy of the pattern.  block_params: per-position params.
+
+    Each layer is itself checkpointed (nested inside the superblock-level
+    checkpoint): the superblock's backward recompute holds only layer
+    boundaries, and each layer's internals are rematerialised one layer at a
+    time — essential for wide multi-layer patterns (Jamba's 8-layer period).
+    """
+    new_caches = []
+    for pi, kind in enumerate(cfg.block_pattern):
+        li = first_layer_idx + pi
+        fk = _ffn_kind(cfg, li)
+        cache = None if caches is None else caches[pi]
+        x, nc = apply_layer(block_params[pi], x, cfg, kind, fk, positions,
+                            cache=cache, cache_pos=cache_pos)
+        new_caches.append(nc)
+    return x, new_caches
+
+
+def lm_head(params: dict, cfg: ModelConfig) -> jax.Array:
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T.astype(jnp.dtype(cfg.dtype))
+    return head
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            embeddings: jax.Array | None = None,
+            return_hidden: bool = False) -> jax.Array:
+    """Training/prefill forward.  tokens (B, S) -> logits (B, S, V).
+
+    ``embeddings`` overrides token embedding (stub modality frontends).
+    ``return_hidden`` skips the LM head (training uses the chunked CE).
+    """
+    x = (params["embed"][tokens] if embeddings is None else embeddings
+         ).astype(jnp.dtype(cfg.dtype))
+    x = lc(x, ("data", "seq", None))
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def scan_body(x, rep_params):
+        # NOTE: ffn kinds depend only on position within the pattern because
+        # every config aligns moe.every_n_layers with the pattern length.
+        y, _ = _superblock(cfg, rep_params, x, positions)
+        return y, None
+
+    body = scan_body
+    if cfg.remat:
+        body = jax.checkpoint(scan_body, policy=remat_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x
+    logits = x @ lm_head(params, cfg)
+    return lc(logits, ("data", None, "model"))
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> list:
+    """Per-pattern-position stacked caches with leading (repeat,) axis."""
+    caches = []
+    for pi, kind in enumerate(cfg.block_pattern):
+        if kind in ("attn", "attn_local"):
+            one = attn_mod.init_kv_cache(cfg, batch, max_len, kind,
+                                         jnp.dtype(cfg.dtype))
+        elif kind == "mamba":
+            one = mamba_mod.init_mamba_cache(cfg, batch, jnp.dtype(cfg.dtype))
+        elif kind == "mlstm":
+            one = xlstm_mod.init_mlstm_cache(cfg, batch)
+        elif kind == "slstm":
+            one = xlstm_mod.init_slstm_cache(cfg, batch)
+        else:
+            raise ValueError(kind)
+        caches.append(jax.tree.map(
+            lambda a: jnp.zeros((cfg.repeat,) + a.shape, a.dtype), one))
+    return caches
+
+
+def decode_step(params: dict, token: jax.Array, caches: list,
+                cache_pos: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, list]:
+    """One decode step.  token (B, 1) -> (logits (B, 1, V), new caches)."""
+    x = params["embed"][token].astype(jnp.dtype(cfg.dtype))
+    b = x.shape[0]
+
+    def scan_body(x, rep):
+        rep_params, rep_caches = rep
+        y, ncs = _superblock(cfg, rep_params, x, None, caches=rep_caches,
+                             cache_pos=cache_pos)
+        return y, ncs
+
+    x, new_caches = jax.lax.scan(scan_body, x, (params["blocks"], caches))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T.astype(x.dtype)
+    logits = x @ head
+    return lc(logits, ("data", None, "model")), new_caches

@@ -1,0 +1,244 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, recurrent) — Beck et al. 2024, arXiv:2405.04517.
+
+mLSTM trains with a quadratic-form parallel formulation (decayed attention
+matrix) chunked over queries like attention; decode keeps a matrix state
+``(B, H, Dh, Dh)`` — O(1) per token, which is why xLSTM runs the 500k cell.
+sLSTM is inherently sequential across time; we scan it (its width is small).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, lc
+
+M_CHUNK = 512
+
+
+def _dims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_in = int(x.m_proj_factor * cfg.d_model)
+    hd = d_in // cfg.num_heads
+    return x, d_in, hd
+
+
+# ------------------------------------------------------------------ mLSTM --
+
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    x, d_in, hd = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], cfg.d_model, 2 * d_in, dtype),
+        "conv_w": (jax.random.normal(ks[1], (x.conv_kernel, d_in), jnp.float32)
+                   * x.conv_kernel ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": dense_init(ks[2], d_in, d_in, dtype),
+        "wk": dense_init(ks[3], d_in, d_in, dtype),
+        "wv": dense_init(ks[4], d_in, d_in, dtype),
+        "w_if": dense_init(ks[5], d_in, 2 * cfg.num_heads, jnp.float32),
+        "out_proj": dense_init(ks[6], d_in, cfg.d_model, dtype),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    x, d_in, hd = _dims(cfg)
+    return {
+        "C": jnp.zeros((batch, cfg.num_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, cfg.num_heads, hd), jnp.float32),
+        "m": jnp.full((batch, cfg.num_heads), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, x.conv_kernel, d_in), jnp.float32),
+    }
+
+
+def _mlstm_parallel(q, k, v, i_gate, f_gate):
+    """Stabilised decayed-attention form.  q/k/v: (B, H, S, Dh)."""
+    b, h, s, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_gate)                       # (B, H, S)
+    cum = jnp.cumsum(logf, axis=-1)
+    # D[t, u] = sum_{j=u+1..t} logf_j + logi_u   (u <= t)
+    dmat = cum[:, :, :, None] - cum[:, :, None, :] + i_gate[:, :, None, :]
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(causal, dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=-1, keepdims=True)               # (B, H, S, 1)
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bhsd,bhud->bhsu", q, k) * (hd ** -0.5) * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(scores, axis=-1, keepdims=True)),
+                       jnp.exp(-m))
+    return jnp.einsum("bhsu,bhud->bhsd", scores / norm, v)
+
+
+def _mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk: int):
+    """Chunk-recurrent mLSTM: O(S/L) sequential chunks, parallel inside.
+
+    Carries the stabilised matrix state (C, n, m) across chunks so long
+    sequences never materialise an (S, S) decay matrix (32k prefill fits).
+    q/k/v: (B, H, S, Dh) f32; gates (B, H, S) f32.
+    """
+    b, h, s, hd = q.shape
+    nc = s // chunk
+    scale = hd ** -0.5
+
+    def split(t):
+        return t.reshape(b, h, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    qc, kc, vc = split(q), split(k), split(v)                # (nc,B,H,L,Dh)
+    ic = i_gate.reshape(b, h, nc, chunk).transpose(2, 0, 1, 3)
+    fc = jax.nn.log_sigmoid(f_gate).reshape(b, h, nc, chunk
+                                            ).transpose(2, 0, 1, 3)
+
+    def body(carry, blk):
+        C, n, m = carry                                       # (B,H,Dh,Dh) ...
+        qb, kb, vb, ib, fb = blk
+        bcum = jnp.cumsum(fb, axis=-1)                        # (B,H,L)
+        btot = bcum[..., -1:]
+        # intra-chunk decay matrix D[t,u] = bcum_t - bcum_u + i_u (u <= t)
+        dmat = bcum[..., :, None] - bcum[..., None, :] + ib[..., None, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(causal, dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=-1)                      # (B,H,L)
+        m_t = jnp.maximum(bcum + m[..., None], m_intra)
+        inter_w = jnp.exp(bcum + m[..., None] - m_t)          # (B,H,L)
+        dexp = jnp.exp(dmat - m_t[..., None])
+        sc = jnp.einsum("bhld,bhud->bhlu", qb, kb) * scale * dexp
+        num = (jnp.einsum("bhlu,bhud->bhld", sc, vb)
+               + inter_w[..., None] * jnp.einsum("bhld,bhde->bhle", qb, C)
+               * scale)
+        den_vec = (jnp.einsum("bhlu->bhl", sc)
+                   + inter_w * jnp.einsum("bhld,bhd->bhl", qb, n) * scale)
+        den = jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_t))[..., None]
+        yb = num / den
+        # state update to end of chunk
+        m_state = jnp.maximum(btot[..., 0] + m,
+                              jnp.max(btot - bcum + ib, axis=-1))
+        w_old = jnp.exp(btot[..., 0] + m - m_state)           # (B,H)
+        w_new = jnp.exp(btot - bcum + ib - m_state[..., None])  # (B,H,L)
+        C = (w_old[..., None, None] * C
+             + jnp.einsum("bhu,bhud,bhue->bhde", w_new, kb, vb))
+        n = w_old[..., None] * n + jnp.einsum("bhu,bhud->bhd", w_new, kb)
+        return (C, n, m_state), yb
+
+    C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    return ys.transpose(1, 2, 0, 3, 4).reshape(b, h, s, hd)
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                cache: dict | None = None) -> tuple[jax.Array, dict | None]:
+    xcfg, d_in, hd = _dims(cfg)
+    b, s, _ = x.shape
+    nh = cfg.num_heads
+    up = x @ p["up_proj"]
+    up = lc(up, ("data", None, "model"))
+    xr, z = jnp.split(up, 2, axis=-1)
+    xr = lc(xr, ("data", None, "model"))
+    z = lc(z, ("data", None, "model"))
+
+    new_cache = None
+    if cache is None:
+        k_ = xcfg.conv_kernel
+        xc = sum(jnp.pad(xr, ((0, 0), (k_ - 1 - i, 0), (0, 0)))[:, :s]
+                 * p["conv_w"][i] for i in range(k_)) + p["conv_b"]
+        xc = jax.nn.silu(xc)
+        q = (xc @ p["wq"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        k = (xc @ p["wk"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        v = (xr @ p["wv"]).reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        gates = xc.astype(jnp.float32) @ p["w_if"]          # (B, S, 2H)
+        i_g, f_g = jnp.split(gates.transpose(0, 2, 1), 2, axis=1)  # (B,H,S)
+        if s > M_CHUNK and s % M_CHUNK == 0:
+            y = _mlstm_chunkwise(q.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32), i_g, f_g, M_CHUNK)
+        else:
+            y = _mlstm_parallel(q.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), i_g, f_g)
+        y = y.transpose(0, 2, 1, 3).reshape(b, s, d_in).astype(x.dtype)
+    else:
+        conv = jnp.concatenate([cache["conv"][:, 1:], xr.astype(jnp.float32)],
+                               axis=1)
+        xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", conv,
+                                    p["conv_w"].astype(jnp.float32))
+                         + p["conv_b"].astype(jnp.float32))
+        q = (xc @ p["wq"].astype(jnp.float32)).reshape(b, nh, hd)
+        k = (xc @ p["wk"].astype(jnp.float32)).reshape(b, nh, hd)
+        v = (xr[:, 0].astype(jnp.float32) @ p["wv"].astype(jnp.float32)
+             ).reshape(b, nh, hd)
+        gates = xc @ p["w_if"]
+        i_g, f_g = gates[:, :nh], gates[:, nh:]
+        logf = jax.nn.log_sigmoid(f_g)
+        m_new = jnp.maximum(logf + cache["m"], i_g)
+        fi = jnp.exp(logf + cache["m"] - m_new)[..., None, None]
+        ii = jnp.exp(i_g - m_new)[..., None, None]
+        C = fi * cache["C"] + ii * jnp.einsum("bhd,bhe->bhde", v, k)
+        n = fi[..., 0] * cache["n"] + ii[..., 0] * k
+        num = jnp.einsum("bhde,bhe->bhd", C, q) * (hd ** -0.5)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q))
+                          * (hd ** -0.5), jnp.exp(-m_new))[..., None]
+        y = (num / den).reshape(b, 1, d_in).astype(x.dtype)
+        new_cache = {"C": C, "n": n, "m": m_new, "conv": conv}
+
+    y = y * jax.nn.silu(z)
+    y = lc(y, ("data", None, "model"))
+    return y @ p["out_proj"], new_cache
+
+
+# ------------------------------------------------------------------ sLSTM --
+
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d = cfg.d_model
+    dff = int(cfg.xlstm.s_ff_factor * d)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype),      # i, f, z, o
+        "r_gates": dense_init(ks[1], d, 4 * d, dtype),      # recurrent
+        "ff_up": dense_init(ks[2], d, dff, dtype),
+        "ff_down": dense_init(ks[3], dff, d, dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, d), -1e30,
+                                                  jnp.float32)}
+
+
+def _slstm_step(p, state, xt):
+    """One recurrence step.  xt: (B, 4D) pre-projected gates input."""
+    c, n, h, m = state
+    gates = xt + h @ p["r_gates"].astype(jnp.float32)
+    i_, f_, z_, o_ = jnp.split(gates, 4, axis=-1)
+    m_new = jnp.maximum(f_ + m, i_)                          # log-space stab
+    i_s = jnp.exp(i_ - m_new)
+    f_s = jnp.exp(f_ + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(z_)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                cache: dict | None = None) -> tuple[jax.Array, dict | None]:
+    b, s, d = x.shape
+    xg = (x @ p["w_gates"]).astype(jnp.float32)              # (B, S, 4D)
+
+    if cache is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = (z, z, z, jnp.full((b, d), -1e30, jnp.float32))
+        state, hs = jax.lax.scan(
+            lambda st, xt: _slstm_step(p, st, xt), state,
+            xg.transpose(1, 0, 2))
+        y = hs.transpose(1, 0, 2).astype(x.dtype)            # (B, S, D)
+        new_cache = None
+    else:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+        state, h = _slstm_step(p, state, xg[:, 0])
+        y = h[:, None, :].astype(x.dtype)
+        new_cache = {"c": state[0], "n": state[1], "h": state[2],
+                     "m": state[3]}
+
+    ff = jax.nn.gelu(y @ p["ff_up"]) @ p["ff_down"]
+    return ff, new_cache

@@ -1,0 +1,4 @@
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, linear_warmup
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule", "linear_warmup"]

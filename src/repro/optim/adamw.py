@@ -1,0 +1,81 @@
+"""AdamW with fp32 master weights, built from scratch (no optax here).
+
+State layout (pytree-of-dicts mirroring params):
+  master  — fp32 copy of the parameters (authoritative)
+  mu, nu  — fp32 first/second moments
+  step    — scalar int32
+
+Optimizer state inherits each parameter's sharding (FSDP keeps the 3x fp32
+state sharded alongside the bf16 compute copy).  Gradient clipping is by
+global norm.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: Any
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, *, memory_mode: str = "fp32") -> AdamWState:
+    """``memory_mode='bf16'`` drops the fp32 master and keeps bf16 moments —
+    6 bytes/param instead of 14, the knob that lets a 398B model train on a
+    single 256-chip pod (update math stays f32; stochastic rounding
+    recommended on real hardware)."""
+    if memory_mode == "bf16":
+        zeros = lambda p: jnp.zeros(p.shape, jnp.bfloat16)
+        master = None  # bf16 params ARE the master copy
+    else:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        master=master,
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr: jax.Array,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state).  ``lr`` may be a traced scalar."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat, vhat = mf / c1, vf / c2
+        wf = w.astype(jnp.float32) - lr * (
+            mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w.astype(jnp.float32))
+        return mf.astype(m.dtype), vf.astype(v.dtype), wf.astype(w.dtype)
+
+    masters = state.master if state.master is not None else params
+    out = jax.tree.map(upd, grads, state.mu, state.nu, masters)
+    is_triple = lambda t: isinstance(t, tuple) and len(t) == 3
+    mu = jax.tree.map(lambda t: t[0], out, is_leaf=is_triple)
+    nu = jax.tree.map(lambda t: t[1], out, is_leaf=is_triple)
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=is_triple)
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    if state.master is None:
+        return new_params, AdamWState(step, None, mu, nu), gnorm
+    return new_params, AdamWState(step, master, mu, nu), gnorm

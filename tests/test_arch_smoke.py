@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode
+step on CPU, asserting output shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import encdec, transformer
+from repro.models.layers import softmax_cross_entropy
+
+B, S = 2, 32
+
+
+def _is_encdec(cfg):
+    return cfg.encoder_layers > 0
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    return request.param
+
+
+def test_full_config_loads(arch):
+    cfg = get_config(arch)
+    counts = cfg.param_counts()
+    assert counts["total"] > 0 and counts["active"] <= counts["total"]
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    if _is_encdec(cfg):
+        params = encdec.init_params(key, cfg)
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (B, cfg.encoder_ctx, cfg.d_model))
+        logits = encdec.forward(params, tokens, frames, cfg)
+    else:
+        params = transformer.init_params(key, cfg)
+        logits = transformer.forward(params, tokens, cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_train_step_decreases_loss(arch):
+    """One SGD step on one batch must reduce that batch's loss."""
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                                cfg.vocab)
+    inp, lbl = tokens[:, :-1], tokens[:, 1:]
+    if _is_encdec(cfg):
+        params = encdec.init_params(key, cfg)
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (B, cfg.encoder_ctx, cfg.d_model))
+
+        def loss_fn(p):
+            return softmax_cross_entropy(encdec.forward(p, inp, frames, cfg),
+                                         lbl)
+    else:
+        params = transformer.init_params(key, cfg)
+
+        def loss_fn(p):
+            return softmax_cross_entropy(transformer.forward(p, inp, cfg),
+                                         lbl)
+
+    loss0, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss0))
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g.astype(p.dtype), params,
+                           grads)
+    loss1 = loss_fn(params2)
+    assert bool(jnp.isfinite(loss1))
+    assert float(loss1) < float(loss0), (arch, float(loss0), float(loss1))
+
+
+def test_decode_step(arch):
+    cfg = get_reduced(arch)
+    if not cfg.decode_supported:
+        pytest.skip("no decode for this arch")
+    key = jax.random.PRNGKey(0)
+    token = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0, cfg.vocab)
+    if _is_encdec(cfg):
+        params = encdec.init_params(key, cfg)
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (B, cfg.encoder_ctx, cfg.d_model))
+        enc_out = encdec.encode(params, frames, cfg)
+        caches = encdec.init_caches(cfg, B, 64)
+        logits, caches2 = encdec.decode_step(params, token, enc_out, caches,
+                                             jnp.int32(0), cfg)
+    else:
+        params = transformer.init_params(key, cfg)
+        caches = transformer.init_caches(cfg, B, 64)
+        logits, caches2 = transformer.decode_step(params, token, caches,
+                                                  jnp.int32(0), cfg)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    # cache must actually change
+    leaves0 = jax.tree.leaves(caches)
+    leaves1 = jax.tree.leaves(caches2)
+    assert any(bool(jnp.any(a != b)) for a, b in zip(leaves0, leaves1))
+
+
+def test_decode_matches_forward(arch):
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = get_reduced(arch)
+    if not cfg.decode_supported or _is_encdec(cfg):
+        pytest.skip("covered elsewhere")
+    # f32: this asserts *algorithmic* equivalence of the parallel and
+    # recurrent paths; bf16 adds rounding noise between the two orderings
+    # (recurrences especially), which is not what this test is about.
+    cfg = cfg.replace(dtype="float32")
+    if cfg.moe is not None:
+        # the dropped-token dispatch drops differently for grouped prefill vs
+        # single-token decode; give the test enough capacity that no token is
+        # ever dropped, making the equivalence exact.
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    full = transformer.forward(params, toks, cfg)
+
+    caches = transformer.init_caches(cfg, 1, 32)
+    outs = []
+    for t in range(8):
+        logits, caches = transformer.decode_step(
+            params, toks[:, t:t + 1], caches, jnp.int32(t), cfg)
+        outs.append(logits[:, 0])
+    step = jnp.stack(outs, axis=1)
+    import numpy as np
+    np.testing.assert_allclose(
+        np.asarray(step, np.float32), np.asarray(full, np.float32),
+        rtol=2e-3, atol=2e-3)

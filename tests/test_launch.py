@@ -1,0 +1,65 @@
+"""Launch layer: shape cells, input specs, skip logic, mesh construction."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.shapes import SHAPES, cell_supported, input_specs
+
+
+def test_shape_cells_match_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_skips_documented():
+    """long_500k runs exactly for the sub-quadratic archs."""
+    runs = {a for a in ARCH_IDS
+            if cell_supported(get_config(a), "long_500k")[0]}
+    assert runs == {"jamba-1.5-large-398b", "gemma3-12b", "xlstm-1.3b"}
+    ok, reason = cell_supported(get_config("qwen3-32b"), "long_500k")
+    assert not ok and "full-attention" in reason
+
+
+def test_input_specs_are_abstract():
+    for arch in ("qwen3-32b", "whisper-small", "jamba-1.5-large-398b"):
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            specs = input_specs(cfg, shape)
+            for v in jax.tree.leaves(specs):
+                assert isinstance(v, jax.ShapeDtypeStruct)  # no allocation
+        t = input_specs(cfg, "train_4k")
+        assert t["tokens"].shape == (256, 4096)
+        if cfg.encoder_layers:
+            assert t["frames"].shape == (256, cfg.encoder_ctx, cfg.d_model)
+
+
+def test_decode_specs():
+    cfg = get_config("gemma3-12b")
+    d = input_specs(cfg, "decode_32k")
+    assert d["token"].shape == (128, 1)
+    assert d["cache_pos"].shape == ()
+
+
+def test_mesh_factories_are_lazy():
+    """Importing mesh.py must not touch jax device state (spec requirement)."""
+    import importlib
+
+    import repro.launch.mesh as m
+    importlib.reload(m)  # would raise if module-level device access existed
+    assert callable(m.make_production_mesh)
+
+
+def test_default_microbatches_scale():
+    from repro.launch.steps import default_microbatches
+
+    assert default_microbatches(get_config("stablelm-1.6b")) == 2
+    assert default_microbatches(get_config("qwen3-32b")) == 4
+    assert default_microbatches(get_config("jamba-1.5-large-398b")) == 8

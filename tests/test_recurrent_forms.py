@@ -1,0 +1,100 @@
+"""Equivalence of the parallel / chunkwise / sequential forms of the
+recurrent sequence mixers (Mamba selective scan, mLSTM) — the chunkwise
+forms are what make the 32k/500k cells feasible, so they must be exact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from repro.models import mamba as M
+from repro.models import xlstm as X
+from repro.models.config import MambaConfig, ModelConfig, XLSTMConfig
+
+
+def _mamba_cfg():
+    return ModelConfig(
+        name="t", family="hybrid", num_layers=1, d_model=16, num_heads=2,
+        kv_heads=2, head_dim=8, d_ff=32, vocab=64,
+        block_pattern=("mamba",), mamba=MambaConfig(d_state=4), remat=False)
+
+
+def _xlstm_cfg():
+    return ModelConfig(
+        name="t", family="ssm", num_layers=2, d_model=16, num_heads=2,
+        kv_heads=2, head_dim=8, d_ff=0, vocab=64,
+        block_pattern=("mlstm", "slstm"), xlstm=XLSTMConfig(), remat=False)
+
+
+def test_mamba_chunked_equals_full_scan():
+    cfg = _mamba_cfg()
+    p = M.mamba_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1024, 16))
+    old = M.SCAN_CHUNK
+    try:
+        M.SCAN_CHUNK = 128
+        y_chunk, _ = M.mamba_block(p, x, cfg)
+        M.SCAN_CHUNK = 1 << 30
+        y_full, _ = M.mamba_block(p, x, cfg)
+    finally:
+        M.SCAN_CHUNK = old
+    assert_allclose(np.asarray(y_chunk), np.asarray(y_full), rtol=1e-4,
+                    atol=1e-5)
+
+
+def test_mamba_sequential_decode_equals_parallel():
+    cfg = _mamba_cfg()
+    p = M.mamba_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 6, 16))
+    y_par, _ = M.mamba_block(p, x, cfg)
+    cache = M.init_mamba_cache(cfg, 1, jnp.float32)
+    ys = []
+    for t in range(6):
+        y, cache = M.mamba_block(p, x[:, t:t + 1], cfg, cache=cache)
+        ys.append(y[:, 0])
+    assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y_par),
+                    rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_chunkwise_equals_parallel():
+    cfg = _xlstm_cfg()
+    p = X.mlstm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 1024, 16))
+    old = X.M_CHUNK
+    try:
+        X.M_CHUNK = 128   # chunked path (1024 > 128)
+        y_chunk, _ = X.mlstm_block(p, x, cfg)
+        X.M_CHUNK = 1 << 30  # parallel path
+        y_par, _ = X.mlstm_block(p, x, cfg)
+    finally:
+        X.M_CHUNK = old
+    assert_allclose(np.asarray(y_chunk), np.asarray(y_par), rtol=2e-4,
+                    atol=2e-4)
+
+
+def test_mlstm_sequential_decode_equals_parallel():
+    cfg = _xlstm_cfg()
+    p = X.mlstm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 5, 16))
+    y_par, _ = X.mlstm_block(p, x, cfg)
+    cache = X.init_mlstm_cache(cfg, 1)
+    ys = []
+    for t in range(5):
+        y, cache = X.mlstm_block(p, x[:, t:t + 1], cfg, cache=cache)
+        ys.append(y[:, 0])
+    assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y_par),
+                    rtol=2e-4, atol=2e-4)
+
+
+def test_slstm_decode_equals_scan():
+    cfg = _xlstm_cfg()
+    p = X.slstm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 5, 16))
+    y_scan, _ = X.slstm_block(p, x, cfg)
+    cache = X.init_slstm_cache(cfg, 1)
+    ys = []
+    for t in range(5):
+        y, cache = X.slstm_block(p, x[:, t:t + 1], cfg, cache=cache)
+        ys.append(y[:, 0])
+    assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y_scan),
+                    rtol=1e-4, atol=1e-5)
