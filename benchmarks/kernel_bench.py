@@ -1,8 +1,14 @@
-"""Pallas kernel microbenchmarks (CPU interpret mode — relative numbers only;
-the structural BlockSpec tiling is the TPU artifact).
+"""Pallas kernel microbenchmarks.
+
+On CPU hosts the Pallas kernels run in interpret mode (relative numbers
+only; the structural BlockSpec tiling is the TPU artifact).  On a real
+backend the kernels compile — ``interpret=None`` auto-detects via
+``jax.default_backend()`` (override per-call to force either mode).
 
 Also measures the XLA-compiled decomposition vs naive zero-laden execution —
-the paper's speedup mechanism, executable today on CPU via XLA.
+the paper's speedup mechanism, executable today on CPU via XLA — including
+the general (kernel, stride) transposed cases and the strided-dilated
+output-class path served by the generalized engine.
 """
 
 from __future__ import annotations
@@ -42,36 +48,57 @@ def run(csv: bool = False) -> list[tuple]:
         rows.append((f"kern.dilated_D{D}.decomposed", t_d,
                      f"speedup={t_n / t_d:.2f}x"))
 
+    # strided-dilated (output-class schedule, DESIGN.md §2c)
+    for d, s in ((4, 2), (8, 2), (4, 4)):
+        naive = jax.jit(
+            lambda x, w, d=d, s=s: dil.dilated_conv2d_naive(x, w, d, s))
+        dec = jax.jit(
+            lambda x, w, d=d, s=s: dil.dilated_conv2d_decomposed(
+                x, w, d, stride=s))
+        t_n, t_d = _time(naive, x, w), _time(dec, x, w)
+        rows.append((f"kern.dilated_d{d}s{s}.naive", t_n, ""))
+        rows.append((f"kern.dilated_d{d}s{s}.decomposed", t_d,
+                     f"speedup={t_n / t_d:.2f}x"))
+
     from repro.core import transposed as tr
     xt = jax.random.normal(k1, (1, 64, 64, 16), jnp.float32)
-    wt = jax.random.normal(k2, (3, 3, 16, 16), jnp.float32)
-    naive_t = jax.jit(lambda x, w: tr.transposed_conv2d_naive(x, w, 2, 1, 1))
-    dec_t = jax.jit(
-        lambda x, w: tr.transposed_conv2d_decomposed(x, w, 2, 1, 1))
-    t_n, t_d = _time(naive_t, xt, wt), _time(dec_t, xt, wt)
-    rows.append(("kern.transposed.naive", t_n, ""))
-    rows.append(("kern.transposed.decomposed", t_d,
-                 f"speedup={t_n / t_d:.2f}x"))
+    for k, s in ((3, 2), (2, 2), (4, 2), (5, 3), (4, 4)):
+        wt = jax.random.normal(k2, (k, k, 16, 16), jnp.float32)
+        p = (k - 1) // 2
+        naive_t = jax.jit(
+            lambda x, w, s=s, p=p: tr.transposed_conv2d_naive(x, w, s, p, 1))
+        dec_t = jax.jit(
+            lambda x, w, s=s, p=p: tr.transposed_conv2d_decomposed(
+                x, w, s, p, 1))
+        t_n, t_d = _time(naive_t, xt, wt), _time(dec_t, xt, wt)
+        rows.append((f"kern.transposed_k{k}s{s}.naive", t_n, ""))
+        rows.append((f"kern.transposed_k{k}s{s}.decomposed", t_d,
+                     f"speedup={t_n / t_d:.2f}x"))
 
-    # Pallas kernels, interpret mode (correct-by-construction check + timing)
+    # Pallas kernels (auto mode: interpret on CPU, compiled on accelerators)
     from repro.kernels import ops
     xp = jax.random.normal(k1, (1, 32, 32, 8), jnp.float32)
     wp = jax.random.normal(k2, (3, 3, 8, 16), jnp.float32)
-    rows.append(("kern.pallas_conv2d.interp",
+    mode = "interp" if jax.default_backend() == "cpu" else "compiled"
+    rows.append((f"kern.pallas_conv2d.{mode}",
                  _time(lambda a, b: ops.conv2d(a, b), xp, wp, iters=2), ""))
-    rows.append(("kern.pallas_tconv.interp",
+    rows.append((f"kern.pallas_tconv.{mode}",
                  _time(lambda a, b: ops.transposed_conv2d(a, b), xp,
                        jax.random.normal(k2, (3, 3, 8, 8)), iters=2), ""))
+    rows.append((f"kern.pallas_tconv_k5s3.{mode}",
+                 _time(lambda a, b: ops.transposed_conv2d(a, b, stride=3), xp,
+                       jax.random.normal(k2, (5, 5, 8, 8)), iters=2), ""))
     a = jax.random.normal(k1, (256, 256), jnp.float32)
     b = jax.random.normal(k2, (256, 256), jnp.float32)
-    rows.append(("kern.pallas_matmul.interp",
+    rows.append((f"kern.pallas_matmul.{mode}",
                  _time(lambda a, b: ops.matmul(a, b), a, b, iters=2), ""))
     q = jax.random.normal(k1, (1, 4, 256, 64), jnp.float32)
-    rows.append(("kern.pallas_flashattn.interp",
+    rows.append((f"kern.pallas_flashattn.{mode}",
                  _time(lambda q: ops.attention(q, q, q), q, iters=2), ""))
 
     if not csv:
-        print("== Kernel microbenchmarks (CPU; Pallas in interpret mode) ==")
+        print(f"== Kernel microbenchmarks (backend={jax.default_backend()}; "
+              f"Pallas mode={mode}) ==")
         for name, us, derived in rows:
             print(f"  {name:34s} {us:10.1f} us  {derived}")
     return rows

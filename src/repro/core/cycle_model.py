@@ -44,6 +44,28 @@ def _ceil(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def _dilated_eff_k(l: ConvLayer) -> int:
+    """Zero-inserted kernel footprint ``d*(k-1)+1`` (``2D+3`` for k=3)."""
+    return (l.D + 1) * (l.kh - 1) + 1
+
+
+def tconv_input_size(l: ConvLayer) -> tuple[int, int]:
+    """Invert the transposed output-size relation to the input extent.
+
+    ``oh = (h_in - 1)*s + p_lo + p_hi - k + 2`` with ``p_lo = (k-1)//2`` and
+    ``p_hi = p_lo + output_padding`` — the general (k, s) form; reduces to
+    ``h_out // s`` for the ENet case (k=3, s=2, output_padding=1).
+    """
+    s = l.stride
+
+    def inv(out: int, k: int) -> int:
+        p_lo = (k - 1) // 2
+        p_hi = p_lo + l.output_padding
+        return (out - p_lo - p_hi + k - 2) // s + 1
+
+    return inv(l.h_out, l.kh), inv(l.w_out, l.kw)
+
+
 # ---------------------------------------------------------------------------
 # MAC counts (architecture-independent)
 # ---------------------------------------------------------------------------
@@ -51,42 +73,66 @@ def _ceil(a: int, b: int) -> int:
 def ideal_dense_macs(l: ConvLayer) -> int:
     """All MACs including zero operands (paper's Fig. 10 baseline)."""
     if l.kind == "dilated":
-        ke = 2 * l.D + 3  # zero-inserted kernel footprint
+        ke = _dilated_eff_k(l)
         return l.h_out * l.w_out * l.cin * l.cout * ke * ke
     # dense conv and transposed-over-zero-inserted-input both issue kh*kw
     # taps per output pixel.
     return l.h_out * l.w_out * l.cin * l.cout * l.kh * l.kw
 
 
+def _dilated_live_taps_dim(in_len: int, out_len: int, d: int, s: int,
+                           p: int, k: int) -> int:
+    """Exact in-bounds tap count along one dim via the output-class schedule
+    (the same one the engine executes — see repro.core.dilated)."""
+    from repro.core.dilated import stride_class_schedule
+
+    _, sb, sched = stride_class_schedule(d, s, p, out_len)
+    total = 0
+    for r, m0, n_out in sched:
+        blk = _ceil(max(in_len - r, 0), d)
+        for u in range(n_out):
+            total += sum(1 for t in range(k) if 0 <= m0 + sb * u + t < blk)
+    return total
+
+
 def ideal_sparse_macs(l: ConvLayer) -> int:
     """Nonzero AND in-bounds MACs only (paper's ideal sparse)."""
     if l.kind == "dilated":
-        d = l.D + 1
-        # sum over phase blocks of SAME-conv in-bounds taps:
-        # sum_i (3*Hb_i - 2) = 3H - 2d  (separable in H and W)
-        return (3 * l.h_out - 2 * d) * (3 * l.w_out - 2 * d) * l.cin * l.cout
+        d, k = l.D + 1, l.kh
+        if l.stride == 1:
+            # sum over phase blocks of SAME-conv in-bounds taps:
+            # sum_i (k*Hb_i - (k-1)) = k*H - (k-1)*d  (separable in H and W)
+            return ((k * l.h_out - (k - 1) * d) * (k * l.w_out - (k - 1) * d)
+                    * l.cin * l.cout)
+        # strided: exact count over the output-class schedule; input extent
+        # is s*h_out (SAME output = ceil(H/s); we model the divisible case).
+        s = l.stride
+        p = (d * (k - 1)) // 2
+        live_r = _dilated_live_taps_dim(s * l.h_out, l.h_out, d, s, p, k)
+        live_c = _dilated_live_taps_dim(s * l.w_out, l.w_out, d, s, p, l.kw)
+        return live_r * live_c * l.cin * l.cout
     if l.kind == "transposed":
         s = l.stride
-        h_in, w_in = l.h_out // s, l.w_out // s
-        p = (l.kh - 1) // 2
+        h_in, w_in = tconv_input_size(l)
         total = 0
+        p_r, p_c = (l.kh - 1) // 2, (l.kw - 1) // 2
         for ry in range(s):
-            taps_r = [t for t in range(l.kh) if (t - p + ry) % s == 0]
+            taps_r = [t for t in range(l.kh) if (t - p_r + ry) % s == 0]
             n_y = len(range(ry, l.h_out, s))
             live_r = sum(
                 1
                 for b in range(n_y)
                 for t in taps_r
-                if 0 <= b + (ry + t - p) // s < h_in
+                if 0 <= b + (ry + t - p_r) // s < h_in
             )
             for rx in range(s):
-                taps_c = [t for t in range(l.kw) if (t - p + rx) % s == 0]
+                taps_c = [t for t in range(l.kw) if (t - p_c + rx) % s == 0]
                 n_x = len(range(rx, l.w_out, s))
                 live_c = sum(
                     1
                     for b in range(n_x)
                     for t in taps_c
-                    if 0 <= b + (rx + t - p) // s < w_in
+                    if 0 <= b + (rx + t - p_c) // s < w_in
                 )
                 total += live_r * live_c
         return total * l.cin * l.cout
@@ -111,8 +157,7 @@ def cycles_ideal_sparse(l: ConvLayer) -> float:
 def cycles_our_general(l: ConvLayer, n: int = N_ROWS, b: int = N_BLOCKS) -> int:
     """Dense convolution on the array (naive path for any layer kind)."""
     if l.kind == "dilated":
-        ke = 2 * l.D + 3
-        kh = kw = ke
+        kh = kw = _dilated_eff_k(l)
         h_out, w_out = l.h_out, l.w_out
     elif l.kind == "transposed":
         kh, kw = l.kh, l.kw
@@ -127,17 +172,21 @@ def cycles_our_general(l: ConvLayer, n: int = N_ROWS, b: int = N_BLOCKS) -> int:
 def cycles_our_decomposed(l: ConvLayer, n: int = N_ROWS, b: int = N_BLOCKS) -> int:
     """Decomposed execution (the paper's method) of a layer on the array."""
     if l.kind == "dilated":
-        d = l.D + 1
-        # Column classes j: ceil((W-j)/d) columns each; boundary columns use
-        # 2 of 3 weight columns -> sum_j (3*Wb_j - 2) = 3W - 2d column-ops.
-        # Phase blocks stream, so rows cost H/n tiles amortized (ceil once
-        # per layer); each weight-column op spans 3 taps x cin channels.
-        col_ops = 3 * l.w_out - 2 * d
+        d, s, k = l.D + 1, l.stride, l.kw
+        # Column classes j (q = d/gcd(s,d) of them, q = d when s = 1): each
+        # has ceil((W-j)/q) output columns; boundary columns drop (k-1) of
+        # the k weight columns across the class -> sum_j (k*Wb_j - (k-1))
+        # column-ops (= 3W - 2d for the paper's k=3, s=1 case).  Phase
+        # blocks stream, so rows cost H/n tiles amortized (ceil once per
+        # layer); each weight-column op packs kh taps x cin channels in
+        # groups of 3.
+        q = d // math.gcd(s, d)
+        col_ops = sum(k * len(range(j, l.w_out, q)) - (k - 1) for j in range(q))
         row_tiles = l.h_out / n  # streamed: quantization amortized per layer
-        return math.ceil(row_tiles * col_ops * l.cin * _ceil(l.cout, b))
+        return math.ceil(
+            row_tiles * col_ops * _ceil(l.kh * l.cin, 3) * _ceil(l.cout, b))
     if l.kind == "transposed":
-        s = l.stride
-        h_in, w_in = l.h_out // s, l.w_out // s
+        h_in, w_in = tconv_input_size(l)
         taps = l.kh * l.kw
         # all sub-kernel taps x cin x cout packed across the 3*B weight
         # ports, sharing the input column broadcast (Fig. 9); input rows tile

@@ -4,6 +4,13 @@
 decomposition applied automatically — this is the entry point the model zoo
 (ENet, conv frontends) uses, so the technique is a first-class framework
 feature rather than a demo.
+
+The engine is fully general: transposed convolutions accept any square
+``(kernel, stride, output_padding)`` via the programmatic parity schedule
+(paper §II-C generalised — see DESIGN.md §3), and dilated convolutions accept
+any ``stride`` via the output-class schedule (DESIGN.md §2c).  ``backend``
+selects the execution engine: ``"xla"`` composes ``lax`` convolutions,
+``"pallas"`` runs the fused Pallas kernels in :mod:`repro.kernels`.
 """
 
 from __future__ import annotations
@@ -25,6 +32,8 @@ def conv2d(
     output_padding: int = 0,
     decomposed: bool = True,
     strategy: str = "batched",
+    backend: str = "xla",
+    interpret: bool | None = None,
 ) -> jax.Array:
     """General 2-D convolution with the paper's decomposition applied.
 
@@ -40,23 +49,49 @@ def conv2d(
         execution, used as the measured baseline).
       strategy: 'batched' (TPU phase-batched) or 'ragged' (paper-faithful) for
         the dilated path.
+      backend: 'xla' (composable lax convolutions) or 'pallas' (fused kernels
+        from :mod:`repro.kernels`).
+      interpret: Pallas interpret-mode override (None -> auto-detect; only
+        meaningful with ``backend='pallas'``).
     """
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "pallas" and not decomposed:
+        # the fused kernels ARE the decomposition; the naive zero-laden
+        # baseline only exists as composed XLA convolutions
+        raise ValueError("naive execution has no pallas kernel; use backend='xla'")
     k = w.shape[0]
     if transposed:
         if dilation != 1:
-            raise ValueError("dilated transposed convolution not used by the paper")
+            raise ValueError("dilated transposed convolution is not supported")
         p = (k - 1) // 2 if padding is None else padding
+        if backend == "pallas":
+            from repro.kernels.transposed_conv import transposed_conv2d as _ktr
+
+            return _ktr(x, w, stride=stride, padding=p,
+                        output_padding=output_padding, interpret=interpret)
         if decomposed:
             return _tr.transposed_conv2d_decomposed(x, w, stride, p, output_padding)
         return _tr.transposed_conv2d_naive(x, w, stride, p, output_padding)
     if dilation > 1:
-        if stride != 1:
-            raise ValueError("strided dilated convolution not used by the paper")
+        if backend == "pallas":
+            if strategy != "batched":
+                raise ValueError(
+                    f"pallas dilated path is phase-batched only, got {strategy!r}")
+            from repro.kernels.dilated_conv import dilated_conv2d as _kdil
+
+            return _kdil(x, w, dilation, stride=stride, interpret=interpret)
         if decomposed:
-            return _dil.dilated_conv2d_decomposed(x, w, dilation, strategy=strategy)
-        return _dil.dilated_conv2d_naive(x, w, dilation)
+            return _dil.dilated_conv2d_decomposed(
+                x, w, dilation, strategy=strategy, stride=stride)
+        return _dil.dilated_conv2d_naive(x, w, dilation, stride=stride)
     # plain dense conv (stride >= 1)
-    import jax.numpy as jnp  # noqa: F401
+    if backend == "pallas":
+        from repro.kernels.conv2d import conv2d as _kconv
+
+        return _kconv(x, w, stride=stride,
+                      padding="SAME" if padding is None else padding,
+                      interpret=interpret)
     from jax import lax
 
     p = (k - 1) // 2 if padding is None else padding

@@ -30,8 +30,9 @@ class ConvLayer:
     kh: int = 3
     kw: int = 3
     D: int = 0           # zeros between taps (dilated only);  d = D + 1
-    stride: int = 1      # upsampling factor for transposed
+    stride: int = 1      # upsampling factor (transposed) or output stride (dilated)
     group: str = "general"  # general | dilated | transposed (paper Fig. 10 split)
+    output_padding: int = 1  # transposed only: extra high-side output size
 
 
 def _bottleneck_regular(prefix: str, hw: int, c: int, D: int = 0, asym: bool = False):

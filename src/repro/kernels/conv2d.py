@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.util import resolve_interpret
+
 
 def _conv_kernel(x_cur, x_nxt, w, out, *, th: int, kh: int, kw: int,
                  stride: int, w_out: int):
@@ -55,7 +57,7 @@ def _conv_kernel(x_cur, x_nxt, w, out, *, th: int, kh: int, kw: int,
 )
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
            padding: str | int = "SAME", th: int = 8, tc: int = 128,
-           interpret: bool = True) -> jax.Array:
+           interpret: bool | None = None) -> jax.Array:
     """Pallas dense convolution. NHWC x HWIO -> NHWC.
 
     Args:
@@ -64,8 +66,9 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
       stride: spatial stride (1 or 2 used in this repo).
       padding: "SAME", "VALID" or an explicit symmetric int.
       th: output rows per tile.  tc: Cout tile width (lane dim, 128 on MXU).
-      interpret: run the kernel body in interpret mode (CPU validation).
+      interpret: None -> auto (interpret on CPU), or an explicit override.
     """
+    interpret = resolve_interpret(interpret)
     n, h, w_in, cin = x.shape
     kh, kw, _, cout = w.shape
     s = stride
@@ -79,6 +82,9 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
     w_out = (w_in + pw[0] + pw[1] - kw) // s + 1
 
     th = min(th, h_out)
+    # the halo (kh - s rows) is served from the *next* row tile, which holds
+    # s*th rows — keep th large enough that one tile covers it (tiny inputs)
+    th = max(th, math.ceil(max(kh - s, 0) / s))
     n_row_tiles = math.ceil(h_out / th)
     h_out_p = n_row_tiles * th
     tc = min(tc, cout)

@@ -8,6 +8,11 @@ the phase-batched strategy recorded as a beyond-paper optimization in
 DESIGN.md §2b: where the paper schedules ragged blocks sequentially on PE
 blocks, a wide MXU prefers a single batched dense conv.
 
+``stride > 1`` generalizes the same pipeline: outputs group into
+``(d/gcd(s,d))**2`` classes (see :func:`repro.core.dilated.stride_class_schedule`),
+each class's phase window is extracted by a layout slice, and all class
+windows batch into ONE strided VALID Pallas convolution.
+
 The dense conv is the :mod:`repro.kernels.conv2d` Pallas kernel, so the whole
 dilated path runs through the same engine the paper's hardware would use.
 """
@@ -21,25 +26,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.conv2d import conv2d as _dense_conv
+from repro.kernels.util import resolve_interpret
 
 
-@functools.partial(jax.jit, static_argnames=("dilation", "th", "tc", "interpret"))
-def dilated_conv2d(x: jax.Array, w: jax.Array, dilation: int, *, th: int = 8,
-                   tc: int = 128, interpret: bool = True) -> jax.Array:
+@functools.partial(jax.jit,
+                   static_argnames=("dilation", "stride", "th", "tc", "interpret"))
+def dilated_conv2d(x: jax.Array, w: jax.Array, dilation: int, *,
+                   stride: int = 1, th: int = 8, tc: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
     """SAME dilated convolution via phase decomposition + dense Pallas conv.
 
     Args:
       x: (N, H, W, Cin).   w: (k, k, Cin, Cout) compact kernel.
       dilation: step d = D + 1.
+      stride: output stride s (output extent ``ceil(H/s)``).
+      interpret: None -> auto (interpret on CPU), or an explicit override.
     Returns:
-      (N, H, W, Cout).
+      (N, ceil(H/s), ceil(W/s), Cout).
     """
-    d = dilation
+    interpret = resolve_interpret(interpret)
+    d, s = dilation, stride
     n, h, w_in, cin = x.shape
     cout = w.shape[-1]
     if d == 1:
-        return _dense_conv(x, w, padding="SAME", th=th, tc=tc,
+        return _dense_conv(x, w, stride=s, padding="SAME", th=th, tc=tc,
                            interpret=interpret)
+    if s != 1:
+        return _strided(x, w, d, s, th=th, tc=tc, interpret=interpret)
 
     hp, wp = math.ceil(h / d) * d, math.ceil(w_in / d) * d
     xpad = jnp.pad(x, ((0, 0), (0, hp - h), (0, wp - w_in), (0, 0)))
@@ -53,3 +66,19 @@ def dilated_conv2d(x: jax.Array, w: jax.Array, dilation: int, *, th: int = 8,
     yb = yb.reshape(d, d, n, hp // d, wp // d, cout)
     y = yb.transpose(2, 3, 0, 4, 1, 5).reshape(n, hp, wp, cout)
     return y[:, :h, :w_in, :]
+
+
+def _strided(x: jax.Array, w: jax.Array, d: int, s: int, *, th: int, tc: int,
+             interpret: bool) -> jax.Array:
+    """Class-batched strided-dilated path: q*q class windows, ONE strided conv.
+
+    Shares the schedule/window/stitch implementation with the XLA path —
+    only the dense conv engine differs.
+    """
+    from repro.core.dilated import _dilated_strided_decomposed
+
+    def conv_fn(xb, wt, sb):
+        return _dense_conv(xb, wt, stride=sb, padding="VALID", th=th, tc=tc,
+                           interpret=interpret)
+
+    return _dilated_strided_decomposed(x, w, d, s, "batched", conv_fn)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.util import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -64,8 +66,9 @@ def _flash_kernel(q, k, v, out, m_scr, l_scr, acc, *, scale: float,
                    static_argnames=("causal", "tq", "tk", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, tq: int = 128, tk: int = 128,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
     """(B, H, Sq, D) x (B, H, Sk, D) -> (B, H, Sq, D)."""
+    interpret = resolve_interpret(interpret)
     b, h, sq, dh = q.shape
     _, _, sk, _ = k.shape
     scale = dh ** -0.5

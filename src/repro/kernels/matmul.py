@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.util import resolve_interpret
+
 
 def _mm_kernel(a, b, out, acc):
     @pl.when(pl.program_id(2) == 0)
@@ -34,8 +36,9 @@ def _mm_kernel(a, b, out, acc):
 
 @functools.partial(jax.jit, static_argnames=("tm", "tn", "tk", "interpret"))
 def matmul(a: jax.Array, b: jax.Array, *, tm: int = 128, tn: int = 128,
-           tk: int = 128, interpret: bool = True) -> jax.Array:
+           tk: int = 128, interpret: bool | None = None) -> jax.Array:
     """(M, K) @ (K, N) -> (M, N) with f32 accumulation."""
+    interpret = resolve_interpret(interpret)
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)

@@ -16,34 +16,36 @@ from repro.kernels.matmul import matmul as _matmul
 from repro.kernels.transposed_conv import transposed_conv2d as _tconv
 
 
-def conv2d(x, w, *, stride=1, padding="SAME", interpret=True):
+def conv2d(x, w, *, stride=1, padding="SAME", interpret=None):
     if x.ndim != 4 or w.ndim != 4 or x.shape[-1] != w.shape[2]:
         raise ValueError(f"bad conv shapes {x.shape} x {w.shape}")
     return _conv2d(x, w, stride=stride, padding=padding, interpret=interpret)
 
 
-def dilated_conv2d(x, w, dilation, *, interpret=True):
+def dilated_conv2d(x, w, dilation, *, stride=1, interpret=None):
     if w.shape[0] != w.shape[1]:
         raise ValueError("square kernels only")
-    return _dilated(x, w, dilation, interpret=interpret)
+    return _dilated(x, w, dilation, stride=stride, interpret=interpret)
 
 
-def transposed_conv2d(x, w, *, stride=2, interpret=True):
-    if stride == 2 and w.shape[0] == w.shape[1] == 3:
-        return _tconv(x, w, interpret=interpret)
-    # general (stride, kernel): composable jnp decomposition path
-    from repro.core.transposed import transposed_conv2d_decomposed
+def transposed_conv2d(x, w, *, stride=2, padding=None, output_padding=1,
+                      interpret=None):
+    """Fused decomposed transposed conv — any square (k, stride)."""
+    if x.ndim != 4 or w.ndim != 4 or x.shape[-1] != w.shape[2]:
+        raise ValueError(f"bad conv shapes {x.shape} x {w.shape}")
+    if w.shape[0] != w.shape[1]:
+        raise ValueError("square kernels only")
+    return _tconv(x, w, stride=stride, padding=padding,
+                  output_padding=output_padding, interpret=interpret)
 
-    return transposed_conv2d_decomposed(x, w, stride, (w.shape[0] - 1) // 2, 1)
 
-
-def matmul(a, b, *, interpret=True):
+def matmul(a, b, *, interpret=None):
     if a.shape[-1] != b.shape[0]:
         raise ValueError(f"bad matmul shapes {a.shape} x {b.shape}")
     return _matmul(a, b, interpret=interpret)
 
 
-def attention(q, k, v, *, causal=True, interpret=True):
+def attention(q, k, v, *, causal=True, interpret=None):
     if q.shape[-1] != k.shape[-1] or k.shape[:2] != v.shape[:2]:
         raise ValueError("bad attention shapes")
     return _flash(q, k, v, causal=causal, interpret=interpret)

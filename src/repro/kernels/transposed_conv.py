@@ -1,18 +1,27 @@
 """Decomposed transposed-convolution Pallas kernel (paper §II-C, Fig. 6/9).
 
-Implements the paper's weight decomposition for the stride-2, 3x3 case used
-throughout ENet's decoder: the kernel computes all four parity sub-
-convolutions (center 1x1, horizontal 1x2, vertical 2x1, corners 2x2) in a
-single pass over each input tile — the TPU analogue of Fig. 9's schedule
-where all nine weights share one input broadcast.  No zero-inserted input is
-ever materialised; MACs issued == nonzero MACs.
+Implements the paper's weight decomposition for *arbitrary* ``(kernel,
+stride, output_padding)``: a transposed convolution with stride ``s``
+decomposes into ``s*s`` parity sub-convolutions, and the per-parity tap
+schedule — which kernel taps land on real (non-zero-inserted) input for each
+output parity, and at which input offset — is generated programmatically from
+``(k, s, padding)`` (the ``ceil(k/s) x ceil(k/s)`` sub-kernel assignment of
+paper Fig. 6).  The kernel computes all parity planes in a single pass over
+each input tile — the TPU analogue of Fig. 9's schedule where all ``k*k``
+weights share one input broadcast.  No zero-inserted input is ever
+materialised; MACs issued == nonzero MACs.
 
-Output is produced as four parity planes ``(N, 4, H, W, Cout)`` and
-interleaved into ``(N, 2H, 2W, Cout)`` by a reshape/transpose in the wrapper
+Output is produced as ``s*s`` parity planes ``(N, s*s, Hb, Wb, Cout)`` and
+interleaved into ``(N, OH, OW, Cout)`` by a reshape/transpose in the wrapper
 (a layout op on TPU).
 
-General (stride, kernel) combinations fall back to the composable jnp path in
-``repro.core.transposed``; ENet only uses this fused case.
+The row halo (input rows past the tile edge needed by positive tap offsets)
+is assembled without overlapping BlockSpecs by passing the input twice — the
+current row tile and the next — and concatenating in VMEM; negative offsets
+(taps reading rows *before* the block index, which appear whenever
+``padding >= s``) are absorbed by shifting the whole input down with a pad.
+
+See DESIGN.md §3 for the schedule derivation.
 """
 
 from __future__ import annotations
@@ -24,81 +33,133 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.util import resolve_interpret
 
-def _tconv_kernel(x_cur, x_nxt, w, out, *, th: int, w_in: int):
-    """Fused 4-parity step: s=2, k=3, p=1, output_padding=1.
 
-    Parity equations (b, c index the input tile; halo row/col +1):
-      out[2b,   2c  ] = w[1,1] x[b, c]
-      out[2b,   2c+1] = w[1,0] x[b, c] + w[1,2] x[b, c+1]
-      out[2b+1, 2c  ] = w[0,1] x[b, c] + w[2,1] x[b+1, c]
-      out[2b+1, 2c+1] = w[0,0] x[b,c] + w[0,2] x[b,c+1]
-                      + w[2,0] x[b+1,c] + w[2,2] x[b+1,c+1]
+def parity_schedule(k: int, s: int, p_lo: int) -> list[list[tuple[int, int]]]:
+    """Per-parity tap schedule for one spatial dim (paper §II-C, Fig. 6).
+
+    Output pixel ``y = s*b + r`` (block ``b``, parity ``r``) reads kernel tap
+    ``t`` iff ``(t - p_lo + r) % s == 0``, from input index ``b + off`` with
+    ``off = (r + t - p_lo) // s``.  Returns ``[(t, off), ...]`` per parity
+    ``r``; a parity's list is empty when no tap hits it (possible for
+    ``k < s`` — that output plane is identically zero).
     """
-    xw = jnp.concatenate([x_cur[0], x_nxt[0][:1]], axis=0)  # (th+1, w_in+1, cin)
+    return [
+        [(t, (r + t - p_lo) // s) for t in range(k) if (t - p_lo + r) % s == 0]
+        for r in range(s)
+    ]
+
+
+def _tconv_kernel(x_cur, x_nxt, w, out, *, th: int, wb: int,
+                  sched, shift: int, halo: int):
+    """Fused all-parity step: every live tap shares one input window."""
+    xw = x_cur[0]
+    if halo > 0:
+        xw = jnp.concatenate([xw, x_nxt[0][:halo]], axis=0)
     cin = xw.shape[-1]
     tc = out.shape[-1]
 
-    def tap(dy, dx, wt):
-        rows = xw[dy : dy + th, dx : dx + w_in, :]
+    def tap(oy, ox, wt):
+        rows = xw[oy : oy + th, ox : ox + wb, :]
         return jax.lax.dot_general(
-            rows.reshape(th * w_in, cin), wt, (((1,), (0,)), ((), ())),
+            rows.reshape(th * wb, cin), wt, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
 
-    ee = tap(0, 0, w[1, 1])
-    eo = tap(0, 0, w[1, 0]) + tap(0, 1, w[1, 2])
-    oe = tap(0, 0, w[0, 1]) + tap(1, 0, w[2, 1])
-    oo = (tap(0, 0, w[0, 0]) + tap(0, 1, w[0, 2])
-          + tap(1, 0, w[2, 0]) + tap(1, 1, w[2, 2]))
-    planes = jnp.stack([ee, eo, oe, oo], axis=0)  # (4, th*w_in, tc)
-    out[0] = planes.reshape(4, th, w_in, tc).astype(out.dtype)
+    planes = []
+    for rtaps in sched:
+        for ctaps in sched:
+            if not rtaps or not ctaps:
+                planes.append(jnp.zeros((th * wb, tc), jnp.float32))
+                continue
+            acc = None
+            for ty, oy in rtaps:
+                for tx, ox in ctaps:
+                    v = tap(oy + shift, ox + shift, w[ty, tx])
+                    acc = v if acc is None else acc + v
+            planes.append(acc)
+    s2 = len(planes)
+    out[0] = jnp.stack(planes, axis=0).reshape(s2, th, wb, tc).astype(out.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("th", "tc", "interpret"))
-def transposed_conv2d(x: jax.Array, w: jax.Array, *, th: int = 8,
-                      tc: int = 128, interpret: bool = True) -> jax.Array:
-    """Fused decomposed transposed conv: s=2, k=3, padding=1, out_pad=1.
+@functools.partial(jax.jit, static_argnames=(
+    "stride", "padding", "output_padding", "th", "tc", "interpret"))
+def transposed_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 2,
+                      padding: int | None = None, output_padding: int = 1,
+                      th: int = 8, tc: int = 128,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused decomposed transposed conv for arbitrary ``(k, stride)``.
 
     Args:
-      x: (N, H, W, Cin).   w: (3, 3, Cin, Cout).
+      x: (N, H, W, Cin).   w: (k, k, Cin, Cout), square.
+      stride: upsampling factor ``s >= 1``.
+      padding: low-side pad of the zero-inserted input; ``None`` -> (k-1)//2.
+      output_padding: extra high-side output size (``p_hi = padding + it``).
+      th: output *block* rows per tile.  tc: Cout tile width.
+      interpret: None -> auto (interpret on CPU), or an explicit override.
     Returns:
-      (N, 2H, 2W, Cout).
+      (N, OH, OW, Cout) with ``OH = (H-1)*s + p_lo + p_hi - k + 2``.
     """
+    interpret = resolve_interpret(interpret)
     n, h, w_in, cin = x.shape
     kh, kw, _, cout = w.shape
-    if (kh, kw) != (3, 3):
-        raise ValueError("fused kernel covers the paper's 3x3/s2 case")
+    if kh != kw:
+        raise ValueError(f"square kernels only, got {kh}x{kw}")
+    k, s = kh, stride
+    p_lo = (k - 1) // 2 if padding is None else padding
+    p_hi = p_lo + output_padding
+    if s == 1:
+        # no zero-insertion -> plain dense correlation with (p_lo, p_hi) pads
+        return jax.lax.conv_general_dilated(
+            x, w, window_strides=(1, 1),
+            padding=[(p_lo, p_hi), (p_lo, p_hi)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    oh = (h - 1) * s + p_lo + p_hi - k + 2
+    ow = (w_in - 1) * s + p_lo + p_hi - k + 2
+    if oh <= 0 or ow <= 0:
+        raise ValueError(f"degenerate output {oh}x{ow} for input {h}x{w_in}")
+    hb, wb = math.ceil(oh / s), math.ceil(ow / s)  # block rows/cols per parity
 
-    th = min(th, h)
-    n_row_tiles = math.ceil(h / th)
-    h_p = n_row_tiles * th
+    sched = parity_schedule(k, s, p_lo)
+    offs = [o for taps in sched for _, o in taps]
+    shift = max(0, -min(offs))      # absorb negative offsets by shifting input
+    halo = max(offs) + shift        # rows needed past the current tile
+
+    th = max(min(th, hb), halo)     # next-tile concat must cover the halo
+    n_row_tiles = math.ceil(hb / th)
     tc = min(tc, cout)
     n_cout_tiles = math.ceil(cout / tc)
     cout_p = n_cout_tiles * tc
 
-    # halo: +1 row (via next-tile concat) and +1 col (padded); plus one extra
-    # row tile so the next-tile BlockSpec stays in bounds.
-    xp = jnp.pad(x, ((0, 0), (0, h_p - h + th), (0, 1), (0, 0)))
+    # rows: one extra tile keeps the next-tile BlockSpec in bounds
+    rows_p = max((n_row_tiles + 1) * th, h + shift)
+    rows_p = math.ceil(rows_p / th) * th
+    cols_p = max(wb + halo, w_in + shift)
+    xp = jnp.pad(x, ((0, 0), (shift, rows_p - h - shift),
+                     (shift, cols_p - w_in - shift), (0, 0)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
 
     grid = (n, n_row_tiles, n_cout_tiles)
-    x_cur = pl.BlockSpec((1, th, w_in + 1, cin), lambda b, i, c: (b, i, 0, 0))
-    x_nxt = pl.BlockSpec((1, th, w_in + 1, cin), lambda b, i, c: (b, i + 1, 0, 0))
-    w_spec = pl.BlockSpec((3, 3, cin, tc), lambda b, i, c: (0, 0, 0, c))
-    out_spec = pl.BlockSpec((1, 4, th, w_in, tc), lambda b, i, c: (b, 0, i, 0, c))
+    x_cur = pl.BlockSpec((1, th, cols_p, cin), lambda b, i, c: (b, i, 0, 0))
+    x_nxt = pl.BlockSpec((1, th, cols_p, cin), lambda b, i, c: (b, i + 1, 0, 0))
+    w_spec = pl.BlockSpec((k, k, cin, tc), lambda b, i, c: (0, 0, 0, c))
+    out_spec = pl.BlockSpec((1, s * s, th, wb, tc), lambda b, i, c: (b, 0, i, 0, c))
 
     planes = pl.pallas_call(
-        functools.partial(_tconv_kernel, th=th, w_in=w_in),
+        functools.partial(_tconv_kernel, th=th, wb=wb, sched=sched,
+                          shift=shift, halo=halo),
         grid=grid,
         in_specs=[x_cur, x_nxt, w_spec],
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((n, 4, h_p, w_in, cout_p), x.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, s * s, n_row_tiles * th, wb, cout_p), x.dtype),
         interpret=interpret,
     )(xp, xp, wp)
 
-    planes = planes[:, :, :h, :, :cout]                    # (N, 4, H, W, C)
-    # interleave parities: out[n, 2b+ry, 2c+rx] = planes[n, 2*ry+rx, b, c]
-    planes = planes.reshape(n, 2, 2, h, w_in, cout)
-    out = planes.transpose(0, 3, 1, 4, 2, 5).reshape(n, 2 * h, 2 * w_in, cout)
-    return out
+    planes = planes[:, :, :hb, :, :cout]                   # (N, s*s, Hb, Wb, C)
+    # interleave parities: out[n, s*b+ry, s*c+rx] = planes[n, s*ry+rx, b, c]
+    planes = planes.reshape(n, s, s, hb, wb, cout)
+    out = planes.transpose(0, 3, 1, 4, 2, 5).reshape(n, hb * s, wb * s, cout)
+    return out[:, :oh, :ow, :]

@@ -1,0 +1,18 @@
+"""Shared helpers for the Pallas kernel package."""
+
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the ``interpret`` flag for a Pallas kernel.
+
+    ``None`` (the default everywhere in this package) auto-detects: interpret
+    mode on CPU hosts, compiled kernels whenever a real accelerator backend is
+    attached.  Pass an explicit bool to override (e.g. ``interpret=True`` to
+    debug a kernel on TPU, or ``False`` to assert compilation).
+    """
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret

@@ -70,8 +70,8 @@ def _bottleneck_init(key, c: int, kind: str = "regular", cin: int | None = None,
 
 
 def _bottleneck(p: dict, x: jax.Array, kind: str, c: int, dilation: int = 1,
-                decomposed: bool = True, strategy: str = "batched"
-                ) -> jax.Array:
+                decomposed: bool = True, strategy: str = "batched",
+                backend: str = "xla") -> jax.Array:
     """kind: regular | dilated | asym | down | up."""
     _DIMS = ("NHWC", "HWIO", "NHWC")
     if kind == "down":
@@ -100,10 +100,10 @@ def _bottleneck(p: dict, x: jax.Array, kind: str, c: int, dilation: int = 1,
                                          dimension_numbers=_DIMS)
     elif kind == "up":
         h = conv2d(h, p["deconv"], stride=2, transposed=True,
-                   output_padding=1, decomposed=decomposed)
+                   output_padding=1, decomposed=decomposed, backend=backend)
     elif kind == "dilated":
         h = conv2d(h, p["conv"], dilation=dilation, decomposed=decomposed,
-                   strategy=strategy)
+                   strategy=strategy, backend=backend)
     else:
         h = conv2d(h, p["conv"])
     h = _prelu(p["a2"], _bn(p["bn2"], h))
@@ -137,10 +137,15 @@ def init_params(key, num_classes: int = 19, dtype=jnp.float32) -> dict:
     return p
 
 
-@functools.partial(jax.jit, static_argnames=("decomposed", "strategy"))
+@functools.partial(jax.jit,
+                   static_argnames=("decomposed", "strategy", "backend"))
 def forward(params: dict, x: jax.Array, decomposed: bool = True,
-            strategy: str = "batched") -> jax.Array:
-    """x: (N, H, W, 3) -> logits (N, H, W, classes)."""
+            strategy: str = "batched", backend: str = "xla") -> jax.Array:
+    """x: (N, H, W, 3) -> logits (N, H, W, classes).
+
+    ``backend='pallas'`` executes every decomposed conv through the fused
+    Pallas engine (:mod:`repro.kernels`) instead of composed XLA convs.
+    """
     h = conv2d(x, params["initial"], stride=2)
     pool = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                  (1, 2, 2, 1), "VALID")
@@ -154,11 +159,14 @@ def forward(params: dict, x: jax.Array, decomposed: bool = True,
         for i, (kind, d) in enumerate(_STAGE2, start=1):
             k = {"reg": "regular", "dil": "dilated", "asym": "asym"}[kind]
             h = _bottleneck(params[f"b{stage}_{i}"], h, k, 128, dilation=d,
-                            decomposed=decomposed, strategy=strategy)
-    h = _bottleneck(params["b4_0"], h, "up", 64, decomposed=decomposed)
+                            decomposed=decomposed, strategy=strategy,
+                            backend=backend)
+    h = _bottleneck(params["b4_0"], h, "up", 64, decomposed=decomposed,
+                    backend=backend)
     for i in range(1, 3):
         h = _bottleneck(params[f"b4_{i}"], h, "regular", 64)
-    h = _bottleneck(params["b5_0"], h, "up", 16, decomposed=decomposed)
+    h = _bottleneck(params["b5_0"], h, "up", 16, decomposed=decomposed,
+                    backend=backend)
     h = _bottleneck(params["b5_1"], h, "regular", 16)
     return conv2d(h, params["fullconv"], stride=2, transposed=True,
-                  output_padding=1, decomposed=decomposed)
+                  output_padding=1, decomposed=decomposed, backend=backend)

@@ -1,0 +1,289 @@
+"""The general parity-plane decomposition engine: arbitrary (kernel, stride).
+
+Covers the three layers the unified dispatcher routes through:
+
+* the fused Pallas transposed-conv kernel (programmatic parity schedule),
+* the strided-dilated output-class path (XLA and Pallas phase-batched),
+* the generalized cycle model ((k, s) schedules; invariants vs naive).
+
+All equivalence tests compare against the naive zero-inserted references in
+``repro.core`` / ``repro.kernels.ref``.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core import cycle_model as cm
+from repro.core import dilated as dil
+from repro.core import transposed as tr
+from repro.core.decompose import conv2d
+from repro.core.enet_spec import ConvLayer, enet_512_layers
+from repro.kernels import ops
+from repro.kernels.transposed_conv import parity_schedule
+
+
+def _pair(seed, xshape, wshape, dtype=jnp.float32):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, xshape, dtype),
+            jax.random.normal(k2, wshape, dtype))
+
+
+# ------------------------------------------------- parity schedule shape ---
+
+def test_parity_schedule_covers_every_tap_once():
+    """Each kernel tap lands in exactly one parity (paper §II-C, Fig. 6)."""
+    for k in (2, 3, 4, 5):
+        for s in (2, 3, 4):
+            sched = parity_schedule(k, s, (k - 1) // 2)
+            taps = [t for taps in sched for t, _ in taps]
+            assert sorted(taps) == list(range(k))
+            # sub-kernel extent is ceil(k/s) or less per parity
+            assert all(len(taps) <= math.ceil(k / s) for taps in sched)
+
+
+def test_parity_schedule_enet_case_matches_fig6():
+    """k=3, s=2, p=1: center 1 tap, endpoints 2 taps (Fig. 6)."""
+    sched = parity_schedule(3, 2, 1)
+    assert [t for t, _ in sched[0]] == [1]      # even parity: center
+    assert [t for t, _ in sched[1]] == [0, 2]   # odd parity: endpoints
+
+
+# --------------------------------- fused Pallas transposed conv, general ---
+
+@pytest.mark.parametrize("k", [2, 3, 4, 5])
+@pytest.mark.parametrize("s", [2, 3, 4])
+@pytest.mark.parametrize("output_padding", [0, 1])
+def test_pallas_tconv_general(k, s, output_padding):
+    p = (k - 1) // 2
+    x, w = _pair(k * 16 + s, (1, 6, 7, 3), (k, k, 3, 5))
+    ref = tr.transposed_conv2d_naive(x, w, s, p, output_padding)
+    got = ops.transposed_conv2d(x, w, stride=s, padding=p,
+                                output_padding=output_padding)
+    assert got.shape == ref.shape
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("h,w", [(5, 5), (8, 6), (9, 13)])
+def test_pallas_tconv_odd_even_sizes(h, w):
+    """Odd/even spatial extents exercise the parity-plane crop."""
+    x, wt = _pair(h * w, (2, h, w, 4), (3, 3, 4, 4))
+    ref = tr.transposed_conv2d_naive(x, wt, 3, 1, 0)
+    got = ops.transposed_conv2d(x, wt, stride=3, output_padding=0)
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_tconv_bf16():
+    x, wt = _pair(3, (1, 8, 8, 4), (4, 4, 4, 6), jnp.bfloat16)
+    ref = tr.transposed_conv2d_naive(x, wt, 3, 1, 1)
+    got = ops.transposed_conv2d(x, wt, stride=3)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(ref, np.float32),
+                    rtol=3e-2, atol=3e-2)
+
+
+# ------------------------------------------------ strided dilated, exact ---
+
+@pytest.mark.parametrize("d", [2, 3, 4])
+@pytest.mark.parametrize("s", [2, 3, 4])
+@pytest.mark.parametrize("strategy", ["ragged", "batched"])
+def test_strided_dilated_decomposed(d, s, strategy):
+    x, w = _pair(d * 10 + s, (2, 13, 11, 3), (3, 3, 3, 4))
+    ref = dil.dilated_conv2d_naive(x, w, d, s)
+    got = dil.dilated_conv2d_decomposed(x, w, d, strategy=strategy, stride=s)
+    assert got.shape == ref.shape
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d,s", [(2, 2), (4, 2), (3, 2), (2, 3), (6, 4)])
+def test_strided_dilated_pallas_path(d, s):
+    x, w = _pair(d + s, (1, 12, 10, 4), (3, 3, 4, 4))
+    ref = dil.dilated_conv2d_reference(x, w, d, s)
+    got = ops.dilated_conv2d(x, w, d, stride=s)
+    assert got.shape == ref.shape
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_stride_class_schedule_reduces_to_paper_for_s1():
+    """s=1 degenerates to the paper's d**2-phase schedule."""
+    q, sb, sched = dil.stride_class_schedule(4, 1, 3, 16)
+    assert (q, sb) == (4, 1)
+    assert sorted(r for r, _, _ in sched) == [0, 1, 2, 3]
+
+
+def test_stride_class_schedule_gcd_folding():
+    """gcd(s, d) folds classes: d=4, s=2 -> 2 classes at block stride 1."""
+    q, sb, _ = dil.stride_class_schedule(4, 2, 3, 16)
+    assert (q, sb) == (2, 1)
+    q, sb, _ = dil.stride_class_schedule(3, 2, 3, 16)
+    assert (q, sb) == (3, 2)
+
+
+# -------------------------------------------------- unified dispatcher -----
+
+@pytest.mark.parametrize("k,s", [(2, 2), (3, 3), (4, 2), (5, 4)])
+def test_dispatcher_transposed_general(k, s):
+    """decompose.conv2d accepts general (k, s) transposed cases."""
+    x, w = _pair(k + s, (1, 6, 6, 2), (k, k, 2, 3))
+    got = conv2d(x, w, stride=s, transposed=True, output_padding=1)
+    ref = conv2d(x, w, stride=s, transposed=True, output_padding=1,
+                 decomposed=False)
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d,s", [(2, 2), (3, 2), (4, 3), (5, 4)])
+def test_dispatcher_strided_dilated(d, s):
+    """decompose.conv2d accepts strided dilated cases (no more ValueError)."""
+    x, w = _pair(d * s, (1, 14, 14, 2), (3, 3, 2, 2))
+    got = conv2d(x, w, stride=s, dilation=d)
+    ref = conv2d(x, w, stride=s, dilation=d, decomposed=False)
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_dense_conv_tiny_inputs():
+    """Phase blocks can shrink to 1x1 (e.g. ENet d=16 on 16x16 maps): the
+    dense Pallas conv must serve tiles smaller than its halo."""
+    from repro.kernels import ref
+
+    for h, w in ((1, 1), (2, 1), (1, 5)):
+        x, wt = _pair(h * 10 + w, (2, h, w, 4), (3, 3, 4, 4))
+        got = ops.conv2d(x, wt)
+        want = ref.conv2d_ref(x, wt)
+        assert got.shape == want.shape
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.slow
+def test_enet_forward_pallas_backend_matches_xla():
+    """The whole ENet net runs through the fused Pallas engine."""
+    from repro.models import enet
+
+    key = jax.random.PRNGKey(0)
+    params = enet.init_params(key, num_classes=4)
+    x = jax.random.normal(key, (1, 64, 64, 3))
+    y_xla = enet.forward(params, x)
+    y_pal = enet.forward(params, x, backend="pallas")
+    assert_allclose(np.asarray(y_pal), np.asarray(y_xla), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("transposed", [False, True])
+def test_dispatcher_pallas_backend(transposed):
+    """backend='pallas' routes through the fused kernels, same numbers."""
+    x, w = _pair(7, (1, 8, 8, 3), (3, 3, 3, 4))
+    kw = (dict(stride=2, transposed=True, output_padding=1) if transposed
+          else dict(dilation=2))
+    got = conv2d(x, w, backend="pallas", **kw)
+    ref = conv2d(x, w, backend="xla", **kw)
+    assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_dispatcher_pallas_rejects_naive_and_ragged():
+    """The fused kernels ARE the decomposition: incompatible flags are loud."""
+    x, w = _pair(11, (1, 8, 8, 2), (3, 3, 2, 2))
+    with pytest.raises(ValueError, match="naive execution has no pallas"):
+        conv2d(x, w, dilation=2, backend="pallas", decomposed=False)
+    with pytest.raises(ValueError, match="phase-batched only"):
+        conv2d(x, w, dilation=2, backend="pallas", strategy="ragged")
+
+
+# ----------------------------------------------- cycle-model invariants ----
+
+def _tconv_layer(h_out, k, s, cin=8, cout=8, output_padding=1):
+    return ConvLayer("t", "transposed", h_out, h_out, cin, cout, k, k,
+                     stride=s, group="transposed",
+                     output_padding=output_padding)
+
+
+@pytest.mark.parametrize("k,s", [(2, 2), (3, 2), (3, 3), (4, 2), (5, 2),
+                                 (4, 3), (5, 4)])
+def test_cycle_model_general_tconv_beats_naive(k, s):
+    """Decomposed cycles <= naive dense cycles for any (k, s) schedule."""
+    op = min(1, s - 1)
+    l = _tconv_layer(48, k, s, output_padding=op)
+    assert cm.cycles_our_decomposed(l) <= cm.cycles_our_general(l)
+    assert cm.ideal_sparse_macs(l) <= cm.ideal_dense_macs(l)
+
+
+@pytest.mark.parametrize("D,s", [(1, 1), (3, 1), (1, 2), (3, 2), (2, 3)])
+def test_cycle_model_dilated_beats_naive(D, s):
+    l = ConvLayer("d", "dilated", 32, 32, 16, 16, 3, 3, D=D, stride=s,
+                  group="dilated")
+    assert cm.cycles_our_decomposed(l) <= cm.cycles_our_general(l)
+
+
+def test_cycle_model_decomposed_beats_naive_all_enet_layers():
+    for l in enet_512_layers():
+        assert cm.cycles_our_decomposed(l) <= cm.cycles_our_general(l), l.name
+
+
+def _brute_force_live_macs(h_in, w_in, oh, ow, k, s, p, cin, cout):
+    """Independent O(oh*ow) reimplementation: count in-bounds nonzero taps."""
+
+    def live(out_len, in_len):
+        c = 0
+        for y in range(out_len):
+            for t in range(k):
+                num = y + t - p
+                if num % s == 0 and 0 <= num // s < in_len:
+                    c += 1
+        return c
+
+    return live(oh, h_in) * live(ow, w_in) * cin * cout
+
+
+def test_enet_decoder_nonzero_macs_match_analytic():
+    """Cycle-model sparse MACs == brute-force nonzero count, and the engine's
+    parity-sum MAC count brackets it, for every ENet decoder layer."""
+    for l in enet_512_layers():
+        if l.kind != "transposed":
+            continue
+        h_in, w_in = cm.tconv_input_size(l)
+        assert (h_in, w_in) == (l.h_out // l.stride, l.w_out // l.stride)
+        p = (l.kh - 1) // 2
+        brute = _brute_force_live_macs(h_in, w_in, l.h_out, l.w_out, l.kh,
+                                       l.stride, p, l.cin, l.cout)
+        assert cm.ideal_sparse_macs(l) == brute, l.name
+        # the engine issues every parity tap incl. boundary pads: >= in-bounds
+        # nonzero MACs, and exactly s*s-fold fewer than the naive execution
+        issued = tr.macs_decomposed_transposed(
+            h_in, w_in, l.cin, l.cout, l.kh, l.stride, p, p + l.output_padding)
+        naive = tr.macs_naive(
+            h_in, w_in, l.cin, l.cout, l.kh, l.stride, p, p + l.output_padding)
+        assert brute <= issued <= naive, l.name
+        assert issued * 3.9 < naive < issued * 4.1, l.name  # s=2 -> ~4x skip
+
+
+def test_general_tconv_input_size_inversion():
+    """tconv_input_size inverts out_size for general (k, s, op)."""
+    for k in (2, 3, 4, 5):
+        for s in (2, 3, 4):
+            for h_in in (7, 16):
+                for op in (0, 1):
+                    p = (k - 1) // 2
+                    oh = tr.out_size(h_in, s, k, p, p + op)
+                    if oh <= 0:
+                        continue
+                    l = _tconv_layer(oh, k, s, output_padding=op)
+                    assert cm.tconv_input_size(l)[0] == h_in, (k, s, h_in, op)
+
+
+def test_dilated_strided_sparse_macs_interior_bound():
+    """Strided ideal-sparse is bounded by the k*k interior approximation."""
+    l = ConvLayer("d", "dilated", 16, 16, 4, 4, 3, 3, D=3, stride=2,
+                  group="dilated")
+    assert cm.ideal_sparse_macs(l) <= dil.macs_decomposed(32, 32, 4, 4, 3, 4, 2)
+
+
+# ------------------------------------------------------- MAC accounting ----
+
+@pytest.mark.parametrize("k,s", [(2, 2), (3, 2), (4, 3), (5, 4)])
+def test_transposed_mac_skip_ratio(k, s):
+    """Decomposition skips ~s*s of the naive MACs in the interior."""
+    naive = tr.macs_naive(64, 64, 8, 8, k, s, (k - 1) // 2, (k - 1) // 2 + 1)
+    dec = tr.macs_decomposed_transposed(64, 64, 8, 8, k, s, (k - 1) // 2,
+                                        (k - 1) // 2 + 1)
+    ratio = naive / dec
+    assert s * s * 0.7 < ratio <= s * s * 1.3

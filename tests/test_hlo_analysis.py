@@ -60,7 +60,10 @@ def test_xla_cost_analysis_is_loop_unaware():
 
     x = jnp.ones((128, 128), jnp.float32)
     compiled = jax.jit(f).lower(x).compile()
-    xla_flops = compiled.cost_analysis()["flops"]
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict], newer returns dict
+        cost = cost[0]
+    xla_flops = cost["flops"]
     ours = analyze(compiled.as_text()).flops
     assert xla_flops == pytest.approx(2 * 128 ** 3)          # 1 iteration
     assert ours == pytest.approx(8 * xla_flops)

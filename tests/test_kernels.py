@@ -96,6 +96,29 @@ def test_transposed_kernel_matches_core_decomposition():
     assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("k,s", [(2, 2), (4, 2), (5, 3), (3, 4)])
+def test_transposed_kernel_general_ks(k, s):
+    """The fused kernel serves any (k, s) via the programmatic schedule."""
+    x, wt = _pair(k * s, (1, 6, 9, 4), (k, k, 4, 6), jnp.float32)
+    got = ops.transposed_conv2d(x, wt, stride=s)
+    want = ref.transposed_conv2d_ref(x, wt, stride=s, padding=(k - 1) // 2,
+                                     output_padding=1)
+    assert got.shape == want.shape
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("d,s", [(2, 2), (3, 2), (4, 2)])
+def test_dilated_kernel_strided(d, s):
+    """Phase-batched Pallas path with an output stride (class schedule)."""
+    from repro.core.dilated import dilated_conv2d_reference
+
+    x, wt = _pair(d * 7 + s, (1, 18, 14, 4), (3, 3, 4, 6), jnp.float32)
+    got = ops.dilated_conv2d(x, wt, d, stride=s)
+    want = dilated_conv2d_reference(x, wt, d, s)
+    assert got.shape == want.shape
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
 # ---------------------------------------------------------------- matmul ---
 
 @pytest.mark.parametrize("mnk", [(16, 16, 16), (128, 128, 128),
