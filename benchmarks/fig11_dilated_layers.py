@@ -1,6 +1,10 @@
 """Fig. 11 reproduction: per-dilation-rate speedup + efficiency vs ideal
 sparse (paper: 83%-98%, higher speedup for larger D), plus an executable
 cross-check that the decomposed convolution's MAC skip matches the model.
+
+Costs BOTH workloads: ENet (the paper's test case) and ESPNet (the spatial
+pyramid of dilated convolutions — Mehta et al. 2018), whose downsampling ESP
+modules exercise the strided output-class schedule (DESIGN.md §2c).
 """
 
 from __future__ import annotations
@@ -10,28 +14,44 @@ import time
 from repro.core import cycle_model as cm
 from repro.core import dilated as dil
 from repro.core.enet_spec import dilated_layer_sets, enet_512_layers
+from repro.core.espnet_spec import espnet_512_layers
+
+WORKLOADS = {"enet": enet_512_layers, "espnet": espnet_512_layers}
 
 
-def run(csv: bool = False) -> list[tuple]:
+def run(csv: bool = False, workloads: tuple[str, ...] = ("enet", "espnet")
+        ) -> list[tuple]:
     t0 = time.perf_counter()
-    layers = enet_512_layers()
     rows = []
-    for D, ls in sorted(dilated_layer_sets(layers).items()):
-        dense = sum(cm.cycles_ideal_dense(l) for l in ls)
-        sparse = sum(cm.cycles_ideal_sparse(l) for l in ls)
-        ours = sum(cm.cycles_our_decomposed(l) for l in ls)
-        mac_ratio = dil.macs_dense(64, 64, 1, 1, 3, D + 1) / \
-            dil.macs_decomposed(64, 64, 1, 1, 3, D + 1)
-        us = (time.perf_counter() - t0) * 1e6
-        rows.append((f"fig11.D{D}.speedup_x", us, f"{dense / ours:.2f}"))
-        rows.append((f"fig11.D{D}.eff_vs_sparse_pct", us,
-                     f"{100 * sparse / ours:.1f}"))
-        rows.append((f"fig11.D{D}.mac_skip_ratio", us, f"{mac_ratio:.2f}"))
+    for wl in workloads:
+        layers = WORKLOADS[wl]()
+        for D, ls in sorted(dilated_layer_sets(layers).items()):
+            dense = sum(cm.cycles_ideal_dense(l) for l in ls)
+            sparse = sum(cm.cycles_ideal_sparse(l) for l in ls)
+            ours = sum(cm.cycles_our_decomposed(l) for l in ls)
+            # executable cross-check from the layer set's own geometry
+            # (input extent s*h_out), so the strided ESPNet branches exercise
+            # the output-class MAC accounting
+            mac_ratio = (
+                sum(dil.macs_dense(l.stride * l.h_out, l.stride * l.w_out,
+                                   l.cin, l.cout, l.kh, l.D + 1, l.stride)
+                    for l in ls)
+                / sum(dil.macs_decomposed(l.stride * l.h_out,
+                                          l.stride * l.w_out, l.cin, l.cout,
+                                          l.kh, l.D + 1, l.stride)
+                      for l in ls))
+            us = (time.perf_counter() - t0) * 1e6
+            tag = f"fig11.{wl}.D{D}"
+            rows.append((f"{tag}.speedup_x", us, f"{dense / ours:.2f}"))
+            rows.append((f"{tag}.eff_vs_sparse_pct", us,
+                         f"{100 * sparse / ours:.1f}"))
+            rows.append((f"{tag}.mac_skip_ratio", us, f"{mac_ratio:.2f}"))
     if not csv:
-        print("== Fig. 11: dilated layers (L1..L4 <-> D = 1,3,7,15) ==")
+        print("== Fig. 11: dilated layers (ENet L1..L4 <-> D = 1,3,7,15; "
+              "ESPNet pyramid D = 1,3,7 incl. strided) ==")
         print("   paper: efficiency 83%..98%, falling with D; speedup rising")
         for name, _, derived in rows:
-            print(f"  {name:32s} {derived}")
+            print(f"  {name:36s} {derived}")
     return rows
 
 

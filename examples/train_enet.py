@@ -3,7 +3,13 @@ dilated/transposed convolution running through the paper's decomposition.
 
   PYTHONPATH=src python examples/train_enet.py --steps 200 --hw 64
 
-(~100M-MAC-scale model; a few hundred steps on CPU at --hw 64.)
+``--backend pallas`` trains through the fused Pallas engine end to end: the
+forward runs the decomposed kernels and the backward runs their custom VJPs
+(input-gradients re-enter the engine through the adjoint symmetry, weight
+gradients are tap-gather correlations — DESIGN.md §6).
+
+(~100M-MAC-scale model; a few hundred steps on CPU at --hw 64.  The pallas
+backend on a CPU host runs in interpret mode — use small --steps/--hw there.)
 """
 
 from __future__ import annotations
@@ -28,7 +34,15 @@ def main() -> None:
     ap.add_argument("--classes", type=int, default=19)
     ap.add_argument("--lr", type=float, default=5e-4)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="execution engine for every conv (fwd AND bwd)")
+    ap.add_argument("--naive", action="store_true",
+                    help="run the zero-laden baseline (no decomposition; "
+                         "xla backend only)")
     args = ap.parse_args()
+    decomposed = not args.naive
+    if args.naive and args.backend == "pallas":
+        ap.error("--naive has no pallas kernels; use --backend xla")
 
     params = enet.init_params(jax.random.PRNGKey(0), args.classes)
     opt = adamw_init(params)
@@ -37,7 +51,8 @@ def main() -> None:
     @jax.jit
     def train_step(params, opt, image, label, lr):
         def loss_fn(p):
-            logits = enet.forward(p, image)
+            logits = enet.forward(p, image, decomposed=decomposed,
+                                  backend=args.backend)
             logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
             nll = -jnp.take_along_axis(logp, label[..., None], axis=-1)
             return jnp.mean(nll)
@@ -66,7 +81,9 @@ def main() -> None:
           f"({'improved' if last < first else 'NOT improved'})")
     # pixel accuracy on a fresh batch
     b = pipe.batch_at(10_000)
-    pred = jnp.argmax(enet.forward(params, jnp.asarray(b["image"])), -1)
+    pred = jnp.argmax(enet.forward(params, jnp.asarray(b["image"]),
+                                   decomposed=decomposed,
+                                   backend=args.backend), -1)
     acc = float(jnp.mean(pred == jnp.asarray(b["label"])))
     print(f"pixel accuracy on held-out batch: {acc:.3f} "
           f"(chance = {1.0 / args.classes:.3f})")

@@ -11,6 +11,15 @@ The engine is fully general: transposed convolutions accept any square
 any ``stride`` via the output-class schedule (DESIGN.md §2c).  ``backend``
 selects the execution engine: ``"xla"`` composes ``lax`` convolutions,
 ``"pallas"`` runs the fused Pallas kernels in :mod:`repro.kernels`.
+
+``conv2d`` is fully differentiable on both backends: the XLA paths are lax
+compositions, and every fused Pallas kernel registers a ``jax.custom_vjp``
+whose backward re-enters the engine through the adjoint symmetry — the
+input-gradient of a strided dense conv is a transposed conv, of a transposed
+conv a strided dense conv, of a dilated conv the same dilated conv; weight
+gradients are tap-gather correlations (DESIGN.md §6,
+:mod:`repro.core.adjoints`).  The pallas backend is first-order
+differentiable (``jax.custom_vjp`` is not forward-differentiable).
 """
 
 from __future__ import annotations

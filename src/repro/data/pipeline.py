@@ -89,8 +89,11 @@ class SegDataPipeline:
             np.random.SeedSequence([self.seed, step]))
         img = rng.normal(size=(self.batch, self.hw, self.hw, 3)
                          ).astype(np.float32)
-        # piecewise-constant label regions (more segmentation-like than iid)
-        coarse = rng.integers(0, self.classes,
-                              (self.batch, self.hw // 32, self.hw // 32))
-        lbl = np.repeat(np.repeat(coarse, 32, axis=1), 32, axis=2)
-        return {"image": img, "label": lbl.astype(np.int32)}
+        # piecewise-constant label regions (more segmentation-like than iid);
+        # region size shrinks with hw so tiny debug inputs still get labels,
+        # and the cell count ceils so non-multiples of 32 cover the full map
+        cell = min(32, self.hw)
+        n_cells = -(-self.hw // cell)
+        coarse = rng.integers(0, self.classes, (self.batch, n_cells, n_cells))
+        lbl = np.repeat(np.repeat(coarse, cell, axis=1), cell, axis=2)
+        return {"image": img, "label": lbl[:, :self.hw, :self.hw].astype(np.int32)}

@@ -58,7 +58,10 @@ def _conv_kernel(x_cur, x_nxt, w, out, *, th: int, kh: int, kw: int,
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
            padding: str | int = "SAME", th: int = 8, tc: int = 128,
            interpret: bool | None = None) -> jax.Array:
-    """Pallas dense convolution. NHWC x HWIO -> NHWC.
+    """Pallas dense convolution. NHWC x HWIO -> NHWC.  Differentiable: a
+    ``jax.custom_vjp`` routes the input-gradient through the transposed-conv
+    engine and the weight-gradient through tap-gather correlations
+    (:mod:`repro.core.adjoints`, DESIGN.md §6).
 
     Args:
       x: (N, H, W, Cin).
@@ -69,15 +72,23 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
       interpret: None -> auto (interpret on CPU), or an explicit override.
     """
     interpret = resolve_interpret(interpret)
+    kh, kw = w.shape[0], w.shape[1]
+    if isinstance(padding, int):
+        pads = ((padding, padding), (padding, padding))
+    elif padding == "SAME":
+        pads = (((kh - 1) // 2, kh // 2), ((kw - 1) // 2, kw // 2))
+    else:  # VALID
+        pads = ((0, 0), (0, 0))
+    return _conv2d_vjp(x, w, stride, pads, th, tc, interpret)
+
+
+def _conv2d_impl(x: jax.Array, w: jax.Array, stride: int,
+                 pads: tuple[tuple[int, int], tuple[int, int]],
+                 th: int, tc: int, interpret: bool) -> jax.Array:
     n, h, w_in, cin = x.shape
     kh, kw, _, cout = w.shape
     s = stride
-    if isinstance(padding, int):
-        ph = pw = (padding, padding)
-    elif padding == "SAME":
-        ph, pw = ((kh - 1) // 2, kh // 2), ((kw - 1) // 2, kw // 2)
-    else:  # VALID
-        ph = pw = (0, 0)
+    ph, pw = pads
     h_out = (h + ph[0] + ph[1] - kh) // s + 1
     w_out = (w_in + pw[0] + pw[1] - kw) // s + 1
 
@@ -93,12 +104,15 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
 
     # pad input so every tile (incl. the +1 halo tile) reads in-bounds:
     # rows needed: s*h_out_p + (kh - s) for tiles, plus one extra halo tile.
+    # (when VALID windows don't consume the whole input, the "needed" extent
+    # is smaller than what's there — clamp at 0; excess rows/cols are simply
+    # never read by any block)
     rows_needed = s * h_out_p + max(kh - s, 0) + s * th
     cols_needed = s * (w_out - 1) + kw
     xp = jnp.pad(
         x,
-        ((0, 0), (ph[0], rows_needed - h - ph[0]),
-         (pw[0], cols_needed - w_in - pw[0]), (0, 0)),
+        ((0, 0), (ph[0], max(rows_needed - h - ph[0], 0)),
+         (pw[0], max(cols_needed - w_in - pw[0], 0)), (0, 0)),
     )
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
 
@@ -120,3 +134,59 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
         interpret=interpret,
     )(xp, xp, wp)
     return out[:, :h_out, :, :cout]
+
+
+# ---------------------------------------------------------------------------
+# Custom VJP (DESIGN.md §6): the input-gradient of a strided dense conv IS a
+# transposed convolution — it routes through the weight-decomposition engine
+# (the fused Pallas transposed-conv kernel); the weight-gradient is a batched
+# tap-gather correlation on the MXU.
+# ---------------------------------------------------------------------------
+
+_conv2d_vjp = jax.custom_vjp(_conv2d_impl, nondiff_argnums=(2, 3, 4, 5, 6))
+
+
+def _conv2d_fwd(x, w, stride, pads, th, tc, interpret):
+    return _conv2d_impl(x, w, stride, pads, th, tc, interpret), (x, w)
+
+
+def _dx_lax(g, w, stride, pads, h, w_in):
+    """Fallback input-gradient (rectangular kernels / exotic pads): the same
+    adjoint expressed as one lhs-dilated lax convolution."""
+    from repro.core.adjoints import flip_io
+
+    kh, kw = w.shape[0], w.shape[1]
+    (pl_h, _), (pl_w, _) = pads
+    hg, wg = g.shape[1], g.shape[2]
+    ph_h = h - (hg - 1) * stride - 1 + pl_h - (kh - 1)
+    ph_w = w_in - (wg - 1) * stride - 1 + pl_w - (kw - 1)
+    return jax.lax.conv_general_dilated(
+        g, flip_io(w), window_strides=(1, 1),
+        padding=[(kh - 1 - pl_h, kh - 1 + ph_h), (kw - 1 - pl_w, kw - 1 + ph_w)],
+        lhs_dilation=(stride, stride),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _conv2d_bwd(stride, pads, th, tc, interpret, res, g):
+    from repro.core import adjoints
+
+    x, w = res
+    kh, kw, _, _ = w.shape
+    (pl_h, _), (pl_w, _) = pads
+    n, h, w_in, _ = x.shape
+    if kh == kw and pl_h == pl_w and kh - 1 - pl_h >= 0:
+        from repro.kernels.transposed_conv import transposed_conv2d as _tconv
+
+        def tconv_fn(gg, wf, s, p_lo, op):
+            return _tconv(gg, wf, stride=s, padding=p_lo, output_padding=op,
+                          th=th, tc=tc, interpret=interpret)
+
+        dx = adjoints.dense_conv_dx(g, w, stride, pl_h, h, w_in, tconv_fn)
+    else:
+        dx = _dx_lax(g, w, stride, pads, h, w_in)
+    dw = adjoints.dense_conv_dw(x, g, kh, kw, stride, pl_h, pl_w)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_conv2d_vjp.defvjp(_conv2d_fwd, _conv2d_bwd)

@@ -36,6 +36,14 @@ def dilated_conv2d(x: jax.Array, w: jax.Array, dilation: int, *,
                    interpret: bool | None = None) -> jax.Array:
     """SAME dilated convolution via phase decomposition + dense Pallas conv.
 
+    Differentiable on all paths: the stride-1 path registers a
+    ``jax.custom_vjp`` exploiting the adjoint symmetry — the input-gradient
+    of a dilated conv is the same dilated conv with the flipped kernel, so
+    it re-enters this engine; the weight-gradient is a tap-gather correlation
+    at step ``d`` (:mod:`repro.core.adjoints`, DESIGN.md §6).  The ``d = 1``
+    and strided paths are compositions over the dense Pallas kernel and
+    differentiate through its VJP.
+
     Args:
       x: (N, H, W, Cin).   w: (k, k, Cin, Cout) compact kernel.
       dilation: step d = D + 1.
@@ -46,14 +54,23 @@ def dilated_conv2d(x: jax.Array, w: jax.Array, dilation: int, *,
     """
     interpret = resolve_interpret(interpret)
     d, s = dilation, stride
-    n, h, w_in, cin = x.shape
-    cout = w.shape[-1]
     if d == 1:
         return _dense_conv(x, w, stride=s, padding="SAME", th=th, tc=tc,
                            interpret=interpret)
     if s != 1:
         return _strided(x, w, d, s, th=th, tc=tc, interpret=interpret)
+    if w.shape[0] % 2 == 0:
+        # even kernels pad SAME asymmetrically — the symmetry adjoint below
+        # assumes odd-k symmetric padding, so differentiate compositionally
+        # through the dense kernel's VJP instead
+        return _dilated_impl(x, w, d, th, tc, interpret)
+    return _dilated_vjp(x, w, d, th, tc, interpret)
 
+
+def _dilated_impl(x: jax.Array, w: jax.Array, d: int, th: int, tc: int,
+                  interpret: bool) -> jax.Array:
+    n, h, w_in, cin = x.shape
+    cout = w.shape[-1]
     hp, wp = math.ceil(h / d) * d, math.ceil(w_in / d) * d
     xpad = jnp.pad(x, ((0, 0), (0, hp - h), (0, wp - w_in), (0, 0)))
     # phases -> batch: (N, H/d, d, W/d, d, C) -> (d*d*N, H/d, W/d, C)
@@ -66,6 +83,36 @@ def dilated_conv2d(x: jax.Array, w: jax.Array, dilation: int, *,
     yb = yb.reshape(d, d, n, hp // d, wp // d, cout)
     y = yb.transpose(2, 3, 0, 4, 1, 5).reshape(n, hp, wp, cout)
     return y[:, :h, :w_in, :]
+
+
+# ---------------------------------------------------------------------------
+# Custom VJP (DESIGN.md §6): the input-gradient of a SAME dilated conv IS the
+# same dilated conv with the flipped kernel — the adjoint re-enters this
+# engine; the weight-gradient gathers taps at step ``d`` (one phase block
+# per tap) and contracts on the MXU.
+# ---------------------------------------------------------------------------
+
+_dilated_vjp = jax.custom_vjp(_dilated_impl, nondiff_argnums=(2, 3, 4, 5))
+
+
+def _dilated_fwd(x, w, d, th, tc, interpret):
+    return _dilated_impl(x, w, d, th, tc, interpret), (x, w)
+
+
+def _dilated_bwd(d, th, tc, interpret, res, g):
+    from repro.core import adjoints
+
+    x, w = res
+
+    def dilated_fn(gg, wf, dd):
+        return _dilated_impl(gg, wf, dd, th, tc, interpret)
+
+    dx = adjoints.dilated_conv_dx(g, w, d, dilated_fn)
+    dw = adjoints.dilated_conv_dw(x, g, w.shape[0], d)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_dilated_vjp.defvjp(_dilated_fwd, _dilated_bwd)
 
 
 def _strided(x: jax.Array, w: jax.Array, d: int, s: int, *, th: int, tc: int,

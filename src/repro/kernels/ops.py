@@ -1,7 +1,9 @@
 """Public jit'd wrappers for the Pallas kernels, with shape checks.
 
 These are the entry points the model zoo uses when ``use_pallas`` execution
-is selected; each has a pure-jnp oracle in :mod:`repro.kernels.ref`.
+is selected; each has a pure-jnp oracle in :mod:`repro.kernels.ref`.  The
+three convolution kernels carry custom VJPs (DESIGN.md §6) and are safe
+under ``jax.grad``.
 """
 
 from __future__ import annotations

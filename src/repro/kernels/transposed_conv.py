@@ -91,6 +91,11 @@ def transposed_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 2,
                       interpret: bool | None = None) -> jax.Array:
     """Fused decomposed transposed conv for arbitrary ``(k, stride)``.
 
+    Differentiable: a ``jax.custom_vjp`` routes the input-gradient through
+    the strided dense engine (the adjoint of upsampling is downsampling) and
+    the weight-gradient through tap-gather correlations
+    (:mod:`repro.core.adjoints`, DESIGN.md §6).
+
     Args:
       x: (N, H, W, Cin).   w: (k, k, Cin, Cout), square.
       stride: upsampling factor ``s >= 1``.
@@ -102,20 +107,27 @@ def transposed_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 2,
       (N, OH, OW, Cout) with ``OH = (H-1)*s + p_lo + p_hi - k + 2``.
     """
     interpret = resolve_interpret(interpret)
-    n, h, w_in, cin = x.shape
-    kh, kw, _, cout = w.shape
+    kh, kw = w.shape[0], w.shape[1]
     if kh != kw:
         raise ValueError(f"square kernels only, got {kh}x{kw}")
-    k, s = kh, stride
-    p_lo = (k - 1) // 2 if padding is None else padding
-    p_hi = p_lo + output_padding
-    if s == 1:
+    p_lo = (kh - 1) // 2 if padding is None else padding
+    if stride == 1:
         # no zero-insertion -> plain dense correlation with (p_lo, p_hi) pads
+        p_hi = p_lo + output_padding
         return jax.lax.conv_general_dilated(
             x, w, window_strides=(1, 1),
             padding=[(p_lo, p_hi), (p_lo, p_hi)],
             dimension_numbers=("NHWC", "HWIO", "NHWC"),
         )
+    return _tconv_vjp(x, w, stride, p_lo, output_padding, th, tc, interpret)
+
+
+def _tconv_impl(x: jax.Array, w: jax.Array, s: int, p_lo: int,
+                output_padding: int, th: int, tc: int,
+                interpret: bool) -> jax.Array:
+    n, h, w_in, cin = x.shape
+    k, _, _, cout = w.shape
+    p_hi = p_lo + output_padding
     oh = (h - 1) * s + p_lo + p_hi - k + 2
     ow = (w_in - 1) * s + p_lo + p_hi - k + 2
     if oh <= 0 or ow <= 0:
@@ -163,3 +175,36 @@ def transposed_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 2,
     planes = planes.reshape(n, s, s, hb, wb, cout)
     out = planes.transpose(0, 3, 1, 4, 2, 5).reshape(n, hb * s, wb * s, cout)
     return out[:, :oh, :ow, :]
+
+
+# ---------------------------------------------------------------------------
+# Custom VJP (DESIGN.md §6): the input-gradient of a transposed conv IS a
+# strided dense convolution — it routes through the dense Pallas engine; the
+# weight-gradient is a batched tap-gather correlation on the MXU.
+# ---------------------------------------------------------------------------
+
+_tconv_vjp = jax.custom_vjp(_tconv_impl, nondiff_argnums=(2, 3, 4, 5, 6, 7))
+
+
+def _tconv_fwd(x, w, s, p_lo, output_padding, th, tc, interpret):
+    return _tconv_impl(x, w, s, p_lo, output_padding, th, tc, interpret), (x, w)
+
+
+def _tconv_bwd(s, p_lo, output_padding, th, tc, interpret, res, g):
+    from repro.core import adjoints
+    from repro.kernels.conv2d import conv2d as _dense_conv
+
+    x, w = res
+    k = w.shape[0]
+    p_hi = p_lo + output_padding
+
+    def conv_fn(gp, wf, stride):
+        return _dense_conv(gp, wf, stride=stride, padding="VALID",
+                           th=th, tc=tc, interpret=interpret)
+
+    dx = adjoints.tconv_dx(g, w, s, p_lo, p_hi, conv_fn)
+    dw = adjoints.tconv_dw(x, g, k, s, p_lo, p_hi)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_tconv_vjp.defvjp(_tconv_fwd, _tconv_bwd)

@@ -1,0 +1,37 @@
+"""Shared building blocks for the segmentation model zoo (ENet, ESPNet).
+
+Batch norm uses batch statistics (training form, as in the ENet paper);
+PReLU carries a single learnable slope per layer.  Kept in one place so a
+change (e.g. the planned fused BN/PReLU epilogues, ROADMAP) hits every
+model at once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_init(key, kh: int, kw: int, cin: int, cout: int, dtype=jnp.float32):
+    """He-normal HWIO kernel init."""
+    fan_in = kh * kw * cin
+    return (jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+            * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
+def prelu(a, x):
+    return jnp.where(x >= 0, x, a * x)
+
+
+def bn_init(c: int, dtype=jnp.float32) -> dict:
+    return {"g": jnp.ones((c,), dtype), "b": jnp.zeros((c,), dtype)}
+
+
+def bn(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Batch norm with batch statistics (training form)."""
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+__all__ = ["conv_init", "prelu", "bn_init", "bn"]

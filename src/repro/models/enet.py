@@ -17,27 +17,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.decompose import conv2d
+from repro.models.common import bn as _bn
+from repro.models.common import bn_init as _bn_init
+from repro.models.common import conv_init
+from repro.models.common import prelu as _prelu
 
 
 def _conv_init(key, k: int, cin: int, cout: int, dtype=jnp.float32):
-    fan_in = k * k * cin
-    return (jax.random.normal(key, (k, k, cin, cout), jnp.float32)
-            * (2.0 / fan_in) ** 0.5).astype(dtype)
-
-
-def _prelu(a, x):
-    return jnp.where(x >= 0, x, a * x)
-
-
-def _bn_init(c: int, dtype=jnp.float32) -> dict:
-    return {"g": jnp.ones((c,), dtype), "b": jnp.zeros((c,), dtype)}
-
-
-def _bn(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
-    """Batch norm with batch statistics (training form, as in ENet)."""
-    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
-    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
-    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+    return conv_init(key, k, k, cin, cout, dtype)
 
 
 def _bottleneck_init(key, c: int, kind: str = "regular", cin: int | None = None,
@@ -75,23 +62,25 @@ def _bottleneck(p: dict, x: jax.Array, kind: str, c: int, dilation: int = 1,
     """kind: regular | dilated | asym | down | up."""
     _DIMS = ("NHWC", "HWIO", "NHWC")
     if kind == "down":
-        h = conv2d(x, p["reduce"], stride=2, padding=0)
+        h = conv2d(x, p["reduce"], stride=2, padding=0, backend=backend)
         skip = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                      (1, 2, 2, 1), "VALID")
         pad_c = c - x.shape[-1]
         skip = jnp.pad(skip, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
     elif kind == "up":
-        h = conv2d(x, p["reduce"])
-        skip = conv2d(x, p["skip"])
-        n, hh, ww, cc = skip.shape
+        h = conv2d(x, p["reduce"], backend=backend)
+        skip = conv2d(x, p["skip"], backend=backend)
         # nearest-neighbour unpool stand-in for max-unpool indices
         skip = jnp.repeat(jnp.repeat(skip, 2, axis=1), 2, axis=2)
     else:
-        h = conv2d(x, p["reduce"])
+        h = conv2d(x, p["reduce"], backend=backend)
         skip = x
     h = _prelu(p["a1"], _bn(p["bn1"], h))
 
     if kind == "asym":
+        # 5x1/1x5 pair pads one dim only — not expressible through the
+        # engine's symmetric-padding dispatch; stays on lax (group "general"
+        # in the cycle model either way).
         h = jax.lax.conv_general_dilated(h, p["conv_v"], (1, 1),
                                          [(2, 2), (0, 0)],
                                          dimension_numbers=_DIMS)
@@ -105,9 +94,9 @@ def _bottleneck(p: dict, x: jax.Array, kind: str, c: int, dilation: int = 1,
         h = conv2d(h, p["conv"], dilation=dilation, decomposed=decomposed,
                    strategy=strategy, backend=backend)
     else:
-        h = conv2d(h, p["conv"])
+        h = conv2d(h, p["conv"], backend=backend)
     h = _prelu(p["a2"], _bn(p["bn2"], h))
-    h = conv2d(h, p["expand"])
+    h = conv2d(h, p["expand"], backend=backend)
     return _prelu(p["a3"], _bn(p["bn3"], h) + skip)
 
 
@@ -143,18 +132,21 @@ def forward(params: dict, x: jax.Array, decomposed: bool = True,
             strategy: str = "batched", backend: str = "xla") -> jax.Array:
     """x: (N, H, W, 3) -> logits (N, H, W, classes).
 
-    ``backend='pallas'`` executes every decomposed conv through the fused
-    Pallas engine (:mod:`repro.kernels`) instead of composed XLA convs.
+    ``backend='pallas'`` executes every conv through the fused Pallas engine
+    (:mod:`repro.kernels`) instead of composed XLA convs — including the 1x1
+    reduce/expand projections and the stem/head, so a pallas forward is
+    all-pallas (the 5x1/1x5 asymmetric pair is the lone lax exception).
+    The whole forward is differentiable on both backends (DESIGN.md §6).
     """
-    h = conv2d(x, params["initial"], stride=2)
+    h = conv2d(x, params["initial"], stride=2, backend=backend)
     pool = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                  (1, 2, 2, 1), "VALID")
     h = jnp.concatenate([h, pool], axis=-1)          # (N, H/2, W/2, 16)
 
-    h = _bottleneck(params["b1_0"], h, "down", 64)
+    h = _bottleneck(params["b1_0"], h, "down", 64, backend=backend)
     for i in range(1, 5):
-        h = _bottleneck(params[f"b1_{i}"], h, "regular", 64)
-    h = _bottleneck(params["b2_0"], h, "down", 128)
+        h = _bottleneck(params[f"b1_{i}"], h, "regular", 64, backend=backend)
+    h = _bottleneck(params["b2_0"], h, "down", 128, backend=backend)
     for stage in (2, 3):
         for i, (kind, d) in enumerate(_STAGE2, start=1):
             k = {"reg": "regular", "dil": "dilated", "asym": "asym"}[kind]
@@ -164,9 +156,9 @@ def forward(params: dict, x: jax.Array, decomposed: bool = True,
     h = _bottleneck(params["b4_0"], h, "up", 64, decomposed=decomposed,
                     backend=backend)
     for i in range(1, 3):
-        h = _bottleneck(params[f"b4_{i}"], h, "regular", 64)
+        h = _bottleneck(params[f"b4_{i}"], h, "regular", 64, backend=backend)
     h = _bottleneck(params["b5_0"], h, "up", 16, decomposed=decomposed,
                     backend=backend)
-    h = _bottleneck(params["b5_1"], h, "regular", 16)
+    h = _bottleneck(params["b5_1"], h, "regular", 16, backend=backend)
     return conv2d(h, params["fullconv"], stride=2, transposed=True,
                   output_padding=1, decomposed=decomposed, backend=backend)

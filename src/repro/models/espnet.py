@@ -1,0 +1,123 @@
+"""ESPNet-style segmentation network built on the paper's decomposition.
+
+ESPNet (Mehta et al., 2018) is the canonical *second* workload for the
+accelerator: its ESP module is a spatial pyramid of dilated convolutions —
+a 1x1 reduce followed by ``K`` parallel 3x3 branches at dilation rates
+``1, 2, 4, 8`` whose outputs are fused hierarchically (HFF) to kill gridding
+artifacts.  Every dilated branch runs through the input decomposition
+(:mod:`repro.core.dilated`), the downsampling ESP modules exercise the
+*strided*-dilated output-class schedule (DESIGN.md §2c), and the decoder's
+upsampling runs through the weight decomposition — so the whole net, like
+ENet, uses the technique as its execution engine.
+
+Layer inventory matches :mod:`repro.core.espnet_spec` (the cycle-model
+workload table).  The forward is differentiable on both backends
+(DESIGN.md §6): ``jax.grad`` through ``backend='pallas'`` exercises the
+custom VJPs of all three fused kernels.
+
+This is a compact variant (alpha2=2, alpha3=3, K=4 branches, light deconv
+decoder) — the module structure, not the exact ESPNet-C widths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decompose import conv2d
+from repro.models.common import bn as _bn
+from repro.models.common import bn_init as _bn_init
+from repro.models.common import conv_init as _conv_init
+from repro.models.common import prelu as _prelu
+
+ESP_DILATIONS = (1, 2, 4, 8)   # K = 4 pyramid branches (d = 2**k)
+
+
+def _esp_init(key, cin: int, cout: int, dtype=jnp.float32) -> dict:
+    """ESP module params: 1x1 reduce -> K dilated 3x3 branches -> BN/PReLU."""
+    K = len(ESP_DILATIONS)
+    if cout % K:
+        raise ValueError(f"cout={cout} not divisible by K={K}")
+    cb = cout // K
+    ks = jax.random.split(key, K + 1)
+    p = {"reduce": _conv_init(ks[0], 1, 1, cin, cb, dtype),
+         "bn": _bn_init(cout, dtype), "a": jnp.full((1,), 0.25, dtype)}
+    for i, d in enumerate(ESP_DILATIONS):
+        p[f"br{d}"] = _conv_init(ks[i + 1], 3, 3, cb, cb, dtype)
+    return p
+
+
+def _esp(p: dict, x: jax.Array, stride: int = 1, decomposed: bool = True,
+         strategy: str = "batched", backend: str = "xla") -> jax.Array:
+    """ESP module: reduce -> K parallel dilated branches -> HFF -> concat.
+
+    ``stride=2`` is the downsampling ESP: every branch is a *strided* dilated
+    convolution through the output-class schedule.  The d=1 branch is a plain
+    dense conv (no decomposition to apply).  HFF (hierarchical feature
+    fusion) adds branch outputs cumulatively before concatenation.
+    """
+    h = conv2d(x, p["reduce"], backend=backend)
+    outs = []
+    for d in ESP_DILATIONS:
+        if d == 1:
+            outs.append(conv2d(h, p[f"br{d}"], stride=stride, backend=backend))
+        else:
+            outs.append(conv2d(h, p[f"br{d}"], dilation=d, stride=stride,
+                               decomposed=decomposed, strategy=strategy,
+                               backend=backend))
+    acc, fused = outs[0], [outs[0]]
+    for o in outs[1:]:              # HFF: cumulative sums de-grid the pyramid
+        acc = acc + o
+        fused.append(acc)
+    y = jnp.concatenate(fused, axis=-1)
+    if stride == 1 and x.shape[-1] == y.shape[-1]:
+        y = y + x                   # residual (regular ESP only)
+    return _prelu(p["a"], _bn(p["bn"], y))
+
+
+def init_params(key, num_classes: int = 19, alpha2: int = 2, alpha3: int = 3,
+                dtype=jnp.float32) -> dict:
+    ks = iter(jax.random.split(key, 16 + alpha2 + alpha3))
+    p = {"stem": _conv_init(next(ks), 3, 3, 3, 16, dtype),
+         "stem_bn": _bn_init(16, dtype), "stem_a": jnp.full((1,), 0.25, dtype)}
+    p["down1"] = _esp_init(next(ks), 16, 64, dtype)
+    for i in range(alpha2):
+        p[f"l2_{i}"] = _esp_init(next(ks), 64, 64, dtype)
+    p["down2"] = _esp_init(next(ks), 64, 128, dtype)
+    for i in range(alpha3):
+        p[f"l3_{i}"] = _esp_init(next(ks), 128, 128, dtype)
+    p["head"] = _conv_init(next(ks), 1, 1, 128, num_classes, dtype)
+    p["skip2"] = _conv_init(next(ks), 1, 1, 64, num_classes, dtype)
+    p["up1"] = _conv_init(next(ks), 3, 3, num_classes, num_classes, dtype)
+    p["up2"] = _conv_init(next(ks), 3, 3, num_classes, num_classes, dtype)
+    p["up3"] = _conv_init(next(ks), 3, 3, num_classes, num_classes, dtype)
+    return p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("decomposed", "strategy", "backend",
+                                    "alpha2", "alpha3"))
+def forward(params: dict, x: jax.Array, decomposed: bool = True,
+            strategy: str = "batched", backend: str = "xla",
+            alpha2: int = 2, alpha3: int = 3) -> jax.Array:
+    """x: (N, H, W, 3) -> logits (N, H, W, classes).  H, W divisible by 8."""
+    kw = dict(decomposed=decomposed, strategy=strategy, backend=backend)
+    h = conv2d(x, params["stem"], stride=2, backend=backend)     # H/2
+    h = _prelu(params["stem_a"], _bn(params["stem_bn"], h))
+    h = _esp(params["down1"], h, stride=2, **kw)                 # H/4, 64
+    for i in range(alpha2):
+        h = _esp(params[f"l2_{i}"], h, **kw)
+    skip = conv2d(h, params["skip2"], backend=backend)           # H/4, C
+    h = _esp(params["down2"], h, stride=2, **kw)                 # H/8, 128
+    for i in range(alpha3):
+        h = _esp(params[f"l3_{i}"], h, **kw)
+    h = conv2d(h, params["head"], backend=backend)               # H/8, C
+    h = conv2d(h, params["up1"], stride=2, transposed=True, output_padding=1,
+               decomposed=decomposed, backend=backend)           # H/4
+    h = h + skip
+    h = conv2d(h, params["up2"], stride=2, transposed=True, output_padding=1,
+               decomposed=decomposed, backend=backend)           # H/2
+    return conv2d(h, params["up3"], stride=2, transposed=True,
+                  output_padding=1, decomposed=decomposed, backend=backend)
