@@ -2,6 +2,11 @@
 
 Paper claims: dilated 85% -> 2%, transposed 7% -> 2%, general 8% -> 9%,
 87.8% cycle reduction, 8.2x speedup over the ideal dense baseline.
+
+Beyond the cycle model, two *measured* deltas on a representative ENet
+bottleneck conv ride along (DESIGN.md §7): fused-epilogue vs unfused wall
+time, and autotuned vs default tiling (both through the Pallas engine —
+interpret-mode relative numbers on CPU hosts).
 """
 
 from __future__ import annotations
@@ -10,6 +15,20 @@ import time
 
 from repro.core import cycle_model as cm
 from repro.core.enet_spec import enet_512_layers
+
+
+def _measured_deltas() -> list[tuple]:
+    """Fused/unfused + tuned/default on the ENet 3x3 bottleneck geometry
+    (shared measurement harness: ``benchmarks.kernel_bench``)."""
+    from benchmarks.kernel_bench import autotune_delta_rows, epilogue_delta_rows
+    from repro.kernels import ops
+
+    xs, ws = (1, 16, 16, 32), (3, 3, 32, 32)
+    cases = [("bottleneck_epilogue",
+              lambda x, w, **ep: ops.conv2d(x, w, **ep), xs, ws)]
+    return (epilogue_delta_rows("fig10.", cases, iters=5)
+            + autotune_delta_rows("fig10.bottleneck_tiles_", xs, ws, iters=5,
+                                  cands=[(4, 64), (8, 128), (16, 128)]))
 
 
 def run(csv: bool = False) -> list[tuple]:
@@ -34,6 +53,7 @@ def run(csv: bool = False) -> list[tuple]:
         ("fig10.headline_reduction_pct", us, f"{hl['cycle_reduction_pct']:.1f} (paper 87.8)"),
         ("fig10.train_speedup_x", us, f"{tr['train_speedup_vs_naive']:.2f} (fwd+bwd, EcoFlow setting)"),
     ]
+    rows += _measured_deltas()
     if not csv:
         print("== Fig. 10: ENet cycle counts (ideal-dense baseline = 100%) ==")
         for name, _, derived in rows:

@@ -19,6 +19,24 @@ from repro.core.espnet_spec import espnet_512_layers
 WORKLOADS = {"enet": enet_512_layers, "espnet": espnet_512_layers}
 
 
+def _epilogue_deltas() -> list[tuple]:
+    """Measured fused-vs-unfused epilogue delta on the dilated engine
+    (ESP-branch geometry; pallas — interpret-mode relative on CPU; shared
+    measurement harness: ``benchmarks.kernel_bench``)."""
+    from benchmarks.kernel_bench import epilogue_delta_rows
+    from repro.kernels import ops
+    from repro.kernels.epilogue import EpilogueSpec
+
+    xs, ws = (1, 16, 16, 16), (3, 3, 16, 16)
+    cases = [
+        (f"epilogue_d{d}",
+         lambda x, w, d=d, **ep: ops.dilated_conv2d(x, w, d, **ep), xs, ws)
+        for d in (2, 8)
+    ]
+    return epilogue_delta_rows("fig11.", cases, iters=5,
+                               spec=EpilogueSpec(bn=True, prelu=True))
+
+
 def run(csv: bool = False, workloads: tuple[str, ...] = ("enet", "espnet")
         ) -> list[tuple]:
     t0 = time.perf_counter()
@@ -46,6 +64,7 @@ def run(csv: bool = False, workloads: tuple[str, ...] = ("enet", "espnet")
             rows.append((f"{tag}.eff_vs_sparse_pct", us,
                          f"{100 * sparse / ours:.1f}"))
             rows.append((f"{tag}.mac_skip_ratio", us, f"{mac_ratio:.2f}"))
+    rows += _epilogue_deltas()
     if not csv:
         print("== Fig. 11: dilated layers (ENet L1..L4 <-> D = 1,3,7,15; "
               "ESPNet pyramid D = 1,3,7 incl. strided) ==")

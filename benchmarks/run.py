@@ -1,22 +1,87 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--emit-json`` additionally
+writes ``BENCH_<rev>.json`` — per-kernel wall times plus the fused/unfused
+and tuned/default ratio tables — so the perf trajectory is machine-tracked
+(CI uploads it as an artifact from the non-blocking slow job).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import subprocess
+import sys
+import time
 
-def main() -> None:
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True, check=True,
+                              timeout=10).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _ratios(rows: list[tuple]) -> dict:
+    """Pull the ``key=value`` ratio annotations out of the derived column."""
+    out: dict[str, dict[str, float]] = {"fused_unfused": {}, "tuned_default": {}}
+    for name, _, derived in rows:
+        for part in str(derived).split(","):
+            if "=" not in part:
+                continue
+            k, _, v = part.partition("=")
+            try:
+                val = float(v.rstrip("x"))
+            except ValueError:
+                continue
+            if k in out:
+                out[k][name] = val
+    return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit-json", action="store_true",
+                    help="write BENCH_<rev>.json next to the CSV output")
+    ap.add_argument("--smoke", action="store_true",
+                    help="pass smoke mode to the kernel microbenchmarks")
+    ns = ap.parse_args(argv)
+
     from benchmarks import (enet_roofline, fig10_enet_speedup,
                             fig11_dilated_layers, fig12_transposed_layers,
                             kernel_bench, roofline, table1_throughput)
 
+    all_rows = []
     print("name,us_per_call,derived")
     for mod in (fig10_enet_speedup, fig11_dilated_layers,
                 fig12_transposed_layers, table1_throughput, kernel_bench,
                 enet_roofline, roofline):
-        for name, us, derived in mod.run(csv=True):
+        kw = {"smoke": True} if (ns.smoke and mod is kernel_bench) else {}
+        for name, us, derived in mod.run(csv=True, **kw):
             print(f"{name},{us:.1f},{derived}")
+            all_rows.append((name, us, derived))
+
+    if ns.emit_json:
+        import jax
+
+        rev = _git_rev()
+        payload = {
+            "rev": rev,
+            "generated_unix": time.time(),
+            "backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "jax_version": jax.__version__,
+            "rows": [{"name": n, "us_per_call": round(u, 1), "derived": d}
+                     for n, u, d in all_rows],
+            "ratios": _ratios(all_rows),
+        }
+        path = f"BENCH_{rev}.json"
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=1)
+        # stderr: stdout is the CSV stream (CI redirects it into bench.csv)
+        print(f"wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -189,7 +189,38 @@ def dilated_conv_dw(x: jax.Array, g: jax.Array, k: int, dilation: int) -> jax.Ar
     return t.transpose(0, 1, 3, 2)
 
 
+# ---------------------------------------------------------------------------
+# fused epilogues (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def fused_epilogue_bwd(conv_apply, spec, x, w, eps, g):
+    """Backward pass of a fused conv+epilogue kernel by adjoint re-entry.
+
+    The fused forward computes ``E(conv(x, w))`` with ``E`` the elementwise
+    epilogue; its pullback is the pullback of the *composition* — so the
+    backward differentiates ``apply_reference(spec, conv_apply(x, w), eps)``
+    with ``jax.vjp``.  ``conv_apply`` is the engine's own differentiable
+    (epilogue-free) kernel, so the conv cotangent re-enters the decomposition
+    adjoints of DESIGN.md §6 with fp32 accumulators, while the BN/PReLU/
+    residual gradients are cheap elementwise jnp ops computed in fp32.
+
+    The pre-epilogue conv output is *recomputed* here rather than saved by
+    the forward — saving it would mean a second HBM write per tile, undoing
+    exactly the traffic the fusion removes.
+
+    Returns ``(dx, dw, deps)`` with ``deps`` matching the ``eps`` tuple.
+    """
+    from repro.kernels import epilogue as _ep
+
+    def f(x, w, eps):
+        return _ep.apply_reference(spec, conv_apply(x, w), eps)
+
+    _, vjp = jax.vjp(f, x, w, eps)
+    return vjp(g)
+
+
 __all__ = [
     "flip_io", "tap_correlation", "dense_conv_dx", "dense_conv_dw",
     "tconv_dx", "tconv_dw", "dilated_conv_dx", "dilated_conv_dw",
+    "fused_epilogue_bwd",
 ]

@@ -2,15 +2,28 @@
 
 ``conv2d`` dispatches to dense / dilated / transposed execution with the
 decomposition applied automatically — this is the entry point the model zoo
-(ENet, conv frontends) uses, so the technique is a first-class framework
-feature rather than a demo.
+(ENet, ESPNet, conv frontends) uses, so the technique is a first-class
+framework feature rather than a demo.
 
 The engine is fully general: transposed convolutions accept any square
 ``(kernel, stride, output_padding)`` via the programmatic parity schedule
-(paper §II-C generalised — see DESIGN.md §3), and dilated convolutions accept
-any ``stride`` via the output-class schedule (DESIGN.md §2c).  ``backend``
-selects the execution engine: ``"xla"`` composes ``lax`` convolutions,
-``"pallas"`` runs the fused Pallas kernels in :mod:`repro.kernels`.
+(paper §II-C generalised — see DESIGN.md §3), dilated convolutions accept
+any ``stride`` via the output-class schedule (DESIGN.md §2c), and dense
+convolutions accept rectangular kernels (ENet's 5x1/1x5 asymmetric pair).
+``backend`` selects the execution engine: ``"xla"`` composes ``lax``
+convolutions, ``"pallas"`` runs the fused Pallas kernels in
+:mod:`repro.kernels`.
+
+Two cross-cutting features ride the dispatcher (DESIGN.md §7):
+
+* **fused epilogues** — ``epilogue=EpilogueSpec(...)`` with matching
+  ``scale``/``shift``/``alpha``/``residual`` operands folds BN, PReLU and a
+  residual add into the kernel's output pass (the XLA backend applies the
+  identical :func:`repro.kernels.epilogue.apply_reference` oracle post-conv,
+  so both backends compute the same function);
+* **autotuned tiling** — when ``th``/``tc`` are left unset, the pallas tile
+  shape is resolved per layer geometry through
+  :mod:`repro.kernels.autotune` (cached sweep; defaults on a cold miss).
 
 ``conv2d`` is fully differentiable on both backends: the XLA paths are lax
 compositions, and every fused Pallas kernel registers a ``jax.custom_vjp``
@@ -18,8 +31,10 @@ whose backward re-enters the engine through the adjoint symmetry — the
 input-gradient of a strided dense conv is a transposed conv, of a transposed
 conv a strided dense conv, of a dilated conv the same dilated conv; weight
 gradients are tap-gather correlations (DESIGN.md §6,
-:mod:`repro.core.adjoints`).  The pallas backend is first-order
-differentiable (``jax.custom_vjp`` is not forward-differentiable).
+:mod:`repro.core.adjoints`); fused epilogues differentiate by adjoint
+re-entry of the conv∘epilogue composition.  The pallas backend is
+first-order differentiable (``jax.custom_vjp`` is not
+forward-differentiable).
 """
 
 from __future__ import annotations
@@ -28,6 +43,22 @@ import jax
 
 from repro.core import dilated as _dil
 from repro.core import transposed as _tr
+from repro.kernels.epilogue import EpilogueSpec, apply_reference, pack_args
+
+
+def _resolve_tiles(kind: str, x, w, stride: int, dilation: int,
+                   th: int | None, tc: int | None, padding=None,
+                   output_padding: int | None = None) -> tuple[int, int]:
+    """Fill unset tile dims from the autotune table (DESIGN.md §7)."""
+    from repro.kernels import autotune
+
+    if th is not None and tc is not None:
+        return th, tc
+    tth, ttc = autotune.get_tiles(kind, tuple(x.shape), tuple(w.shape),
+                                  stride=stride, dilation=dilation,
+                                  dtype=x.dtype, padding=padding,
+                                  output_padding=output_padding)
+    return (tth if th is None else th), (ttc if tc is None else tc)
 
 
 def conv2d(
@@ -43,12 +74,20 @@ def conv2d(
     strategy: str = "batched",
     backend: str = "xla",
     interpret: bool | None = None,
+    epilogue: EpilogueSpec | None = None,
+    scale: jax.Array | None = None,
+    shift: jax.Array | None = None,
+    alpha: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    th: int | None = None,
+    tc: int | None = None,
 ) -> jax.Array:
     """General 2-D convolution with the paper's decomposition applied.
 
     Args:
       x: (N, H, W, Cin) input.
-      w: (k, k, Cin, Cout) compact kernel (never zero-inserted by the caller).
+      w: (kh, kw, Cin, Cout) compact kernel (never zero-inserted by the
+        caller); rectangular ``kh != kw`` supported for plain dense convs.
       stride: forward-conv stride, or upsampling factor when ``transposed``.
       dilation: dilation step ``d = D + 1`` (forward conv only).
       transposed: run a transposed (fractionally-strided) convolution.
@@ -62,6 +101,11 @@ def conv2d(
         from :mod:`repro.kernels`).
       interpret: Pallas interpret-mode override (None -> auto-detect; only
         meaningful with ``backend='pallas'``).
+      epilogue: optional fused BN/PReLU/residual epilogue spec (DESIGN.md §7)
+        with matching ``scale``/``shift``/``alpha``/``residual`` operands;
+        fused in-kernel on pallas, applied as the reference oracle on xla.
+      th, tc: Pallas tile shape override; ``None`` resolves through the
+        autotune table (:mod:`repro.kernels.autotune`).
     """
     if backend not in ("xla", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -69,45 +113,69 @@ def conv2d(
         # the fused kernels ARE the decomposition; the naive zero-laden
         # baseline only exists as composed XLA convolutions
         raise ValueError("naive execution has no pallas kernel; use backend='xla'")
-    k = w.shape[0]
+    spec = EpilogueSpec() if epilogue is None else epilogue
+    eps = pack_args(spec, scale=scale, shift=shift, alpha=alpha,
+                    residual=residual)
+    ep_kw = dict(zip(spec.slots, eps))
+    kh, kw = w.shape[0], w.shape[1]
     if transposed:
         if dilation != 1:
             raise ValueError("dilated transposed convolution is not supported")
-        p = (k - 1) // 2 if padding is None else padding
+        if kh != kw:
+            raise ValueError("transposed convolution requires square kernels")
+        p = (kh - 1) // 2 if padding is None else padding
         if backend == "pallas":
             from repro.kernels.transposed_conv import transposed_conv2d as _ktr
 
+            th, tc = _resolve_tiles("tconv", x, w, stride, 1, th, tc,
+                                    padding=p, output_padding=output_padding)
             return _ktr(x, w, stride=stride, padding=p,
-                        output_padding=output_padding, interpret=interpret)
+                        output_padding=output_padding, th=th, tc=tc,
+                        interpret=interpret, epilogue=epilogue, **ep_kw)
         if decomposed:
-            return _tr.transposed_conv2d_decomposed(x, w, stride, p, output_padding)
-        return _tr.transposed_conv2d_naive(x, w, stride, p, output_padding)
+            y = _tr.transposed_conv2d_decomposed(x, w, stride, p, output_padding)
+        else:
+            y = _tr.transposed_conv2d_naive(x, w, stride, p, output_padding)
+        return apply_reference(spec, y, eps)
     if dilation > 1:
+        if kh != kw:
+            raise ValueError("dilated convolution requires square kernels")
         if backend == "pallas":
             if strategy != "batched":
                 raise ValueError(
                     f"pallas dilated path is phase-batched only, got {strategy!r}")
             from repro.kernels.dilated_conv import dilated_conv2d as _kdil
 
-            return _kdil(x, w, dilation, stride=stride, interpret=interpret)
+            th, tc = _resolve_tiles("dilated", x, w, stride, dilation, th, tc)
+            return _kdil(x, w, dilation, stride=stride, th=th, tc=tc,
+                         interpret=interpret, epilogue=epilogue, **ep_kw)
         if decomposed:
-            return _dil.dilated_conv2d_decomposed(
+            y = _dil.dilated_conv2d_decomposed(
                 x, w, dilation, strategy=strategy, stride=stride)
-        return _dil.dilated_conv2d_naive(x, w, dilation, stride=stride)
-    # plain dense conv (stride >= 1)
+        else:
+            y = _dil.dilated_conv2d_naive(x, w, dilation, stride=stride)
+        return apply_reference(spec, y, eps)
+    # plain dense conv (stride >= 1, rectangular kernels welcome)
     if backend == "pallas":
         from repro.kernels.conv2d import conv2d as _kconv
 
+        th, tc = _resolve_tiles("dense", x, w, stride, 1, th, tc,
+                                padding=padding)
         return _kconv(x, w, stride=stride,
                       padding="SAME" if padding is None else padding,
-                      interpret=interpret)
+                      th=th, tc=tc, interpret=interpret, epilogue=epilogue,
+                      **ep_kw)
     from jax import lax
 
-    p = (k - 1) // 2 if padding is None else padding
-    return lax.conv_general_dilated(
-        x, w, window_strides=(stride, stride), padding=[(p, p), (p, p)],
+    if padding is None:     # SAME, asymmetric for even extents
+        pads = [((kh - 1) // 2, kh // 2), ((kw - 1) // 2, kw // 2)]
+    else:
+        pads = [(padding, padding), (padding, padding)]
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=pads,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
+    return apply_reference(spec, y, eps)
 
 
 __all__ = ["conv2d"]

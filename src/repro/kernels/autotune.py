@@ -1,0 +1,228 @@
+"""Per-shape ``(th, tc)`` tile autotuning for the Pallas engines (DESIGN.md §7).
+
+The kernels' tile shape used to be hard-coded at ``(th, tc) = (8, 128)``
+regardless of layer geometry.  This module sweeps a small candidate grid per
+*(engine kind, input shape, kernel, stride, dilation, dtype)* key and caches
+the winner — in memory for the process, and on disk so the sweep cost is
+paid once per machine.
+
+Cache layout and invalidation (DESIGN.md §7):
+
+* one JSON file per ``(device kind, jax version)`` —
+  ``<cache dir>/<device_kind>-jax<version>-v<SCHEMA>.json`` — so a different
+  accelerator, an upgraded jax, or a schema bump each start from a clean
+  table rather than serving stale timings;
+* the cache dir is ``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro-autotune``;
+* entries map :func:`make_key` strings to ``[th, tc]`` pairs.
+
+``get_tiles`` is wired into the dispatcher (``repro.core.decompose.conv2d``)
+so every call site benefits transparently: a cache hit returns the tuned
+tiles, a miss returns the defaults *without* sweeping unless autotuning is
+switched on (``REPRO_AUTOTUNE=1``) — keeping cold-start latency and CI
+determinism intact.  Sweeps can also be run ahead of time via :func:`tune`
+(``benchmarks/kernel_bench.py`` does, and reports the tuned-vs-default
+delta).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_TILES = (8, 128)
+_SCHEMA = 1
+#: candidate grids — th rides the sublane axis, tc the 128-wide lane axis
+TH_CANDIDATES = (4, 8, 16, 32)
+TC_CANDIDATES = (64, 128, 256)
+KINDS = ("dense", "dilated", "tconv")
+
+_MEM: dict[str, tuple[int, int]] = {}
+_DISK: dict[str, tuple[int, int]] | None = None
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "").lower() in ("1", "true", "on")
+
+
+def _device_kind() -> str:
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:  # no backend at all — still allow cache-key formation
+        kind = "unknown"
+    return "".join(c if c.isalnum() else "_" for c in kind)
+
+
+def cache_path() -> pathlib.Path:
+    base = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    root = pathlib.Path(base) if base else (
+        pathlib.Path.home() / ".cache" / "repro-autotune")
+    return root / f"{_device_kind()}-jax{jax.__version__}-v{_SCHEMA}.json"
+
+
+def make_key(kind: str, x_shape: tuple, w_shape: tuple, *, stride: int = 1,
+             dilation: int = 1, dtype=jnp.float32, padding=None,
+             output_padding: int | None = None) -> str:
+    """Canonical cache key for one kernel geometry.
+
+    ``padding``/``output_padding`` are part of the geometry — they change
+    the output extent and therefore the tiling.  ``None`` is *canonicalised*
+    to the engine default (dense/dilated ``SAME``, tconv ``(k-1)//2`` and
+    ``output_padding=1``) so the dispatcher's resolved values and an
+    ahead-of-time ``tune()`` call with defaults produce the same key.
+    """
+    if kind not in KINDS:
+        raise ValueError(f"unknown engine kind {kind!r}")
+    n, h, w, cin = x_shape
+    kh, kw = w_shape[0], w_shape[1]
+    cout = w_shape[3]
+    if kind == "tconv":
+        pad = (kh - 1) // 2 if padding is None else padding
+        op = 1 if output_padding is None else output_padding
+    else:
+        pad = "SAME" if padding is None else padding
+        op = 0      # forward convs have no output padding
+    return (f"{kind}/n{n}x{h}x{w}x{cin}/k{kh}x{kw}x{cout}"
+            f"/s{stride}/d{dilation}/p{pad}/op{op}/{jnp.dtype(dtype).name}")
+
+
+def candidates(h_out: int, cout: int) -> list[tuple[int, int]]:
+    """The (th, tc) sweep grid, clipped to the output geometry.
+
+    Oversized candidates are dropped rather than clamped — the kernels clamp
+    internally, so a clamped duplicate would just re-time the same tiling.
+    """
+    ths = [t for t in TH_CANDIDATES if t <= max(h_out, TH_CANDIDATES[0])]
+    tcs = [t for t in TC_CANDIDATES if t <= max(cout, TC_CANDIDATES[0])]
+    return [(th, tc) for th in ths for tc in tcs]
+
+
+def _load_disk() -> dict[str, tuple[int, int]]:
+    global _DISK
+    if _DISK is None:
+        _DISK = {}
+        path = cache_path()
+        if path.exists():
+            try:
+                raw = json.loads(path.read_text())
+                _DISK = {k: tuple(v) for k, v in raw.get("entries", {}).items()}
+            except (json.JSONDecodeError, OSError):
+                _DISK = {}      # corrupt cache — retune rather than crash
+    return _DISK
+
+
+def _persist(key: str, tiles: tuple[int, int]) -> None:
+    disk = _load_disk()
+    disk[key] = tiles
+    path = cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload = {"device_kind": _device_kind(), "jax_version": jax.__version__,
+               "schema": _SCHEMA,
+               "entries": {k: list(v) for k, v in sorted(disk.items())}}
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(payload, indent=1))
+    tmp.replace(path)           # atomic: concurrent readers see old or new
+
+
+def clear_memory_cache() -> None:
+    """Drop the in-process caches (tests; after swapping the cache dir)."""
+    global _DISK
+    _MEM.clear()
+    _DISK = None
+
+
+def _build_call(kind: str, x: jax.Array, w: jax.Array, th: int, tc: int,
+                stride: int, dilation: int, padding, output_padding):
+    if kind == "dense":
+        from repro.kernels.conv2d import conv2d
+        return lambda: conv2d(x, w, stride=stride,
+                              padding="SAME" if padding is None else padding,
+                              th=th, tc=tc)
+    if kind == "dilated":
+        from repro.kernels.dilated_conv import dilated_conv2d
+        return lambda: dilated_conv2d(x, w, dilation, stride=stride,
+                                      th=th, tc=tc)
+    from repro.kernels.transposed_conv import transposed_conv2d
+    return lambda: transposed_conv2d(
+        x, w, stride=stride, padding=padding,
+        output_padding=1 if output_padding is None else output_padding,
+        th=th, tc=tc)
+
+
+def _time_candidate(call, iters: int) -> float:
+    """Best-of-``iters`` wall time (s) after a compile/warmup call."""
+    jax.block_until_ready(call())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(call())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def tune(kind: str, x_shape: tuple, w_shape: tuple, *, stride: int = 1,
+         dilation: int = 1, dtype=jnp.float32, padding=None,
+         output_padding: int | None = None, iters: int = 3,
+         cands: list[tuple[int, int]] | None = None) -> tuple[int, int]:
+    """Sweep the candidate grid for one geometry and persist the winner.
+
+    Deterministic given timings: candidates are visited in a fixed order and
+    ties keep the earlier candidate.  Returns the winning ``(th, tc)``.
+    """
+    key = make_key(kind, x_shape, w_shape, stride=stride, dilation=dilation,
+                   dtype=dtype, padding=padding, output_padding=output_padding)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, x_shape, jnp.float32).astype(dtype)
+    w = jax.random.normal(k2, w_shape, jnp.float32).astype(dtype)
+    if kind == "tconv":
+        # th tiles the per-parity *block-row* axis: ~ceil(OH/s) ~ H rows
+        h_out = x_shape[1]
+    else:
+        h_out = -(-x_shape[1] // stride)
+    if cands is None:
+        cands = candidates(h_out, w_shape[3])
+    best, best_t = DEFAULT_TILES, float("inf")
+    for th, tc in cands:
+        t = _time_candidate(_build_call(kind, x, w, th, tc, stride, dilation,
+                                        padding, output_padding),
+                            iters)
+        if t < best_t:
+            best, best_t = (th, tc), t
+    _MEM[key] = best
+    _persist(key, best)
+    return best
+
+
+def get_tiles(kind: str, x_shape: tuple, w_shape: tuple, *, stride: int = 1,
+              dilation: int = 1, dtype=jnp.float32, padding=None,
+              output_padding: int | None = None) -> tuple[int, int]:
+    """Resolve the tile shape for one geometry: mem -> disk -> sweep/defaults.
+
+    Only sweeps on a full miss when ``REPRO_AUTOTUNE=1`` — the default is a
+    pure lookup so cold paths (tests, first-run UX) stay deterministic and
+    cheap; the table is populated by CI / ``kernel_bench`` runs and shipped
+    via the CI cache.
+    """
+    key = make_key(kind, x_shape, w_shape, stride=stride, dilation=dilation,
+                   dtype=dtype, padding=padding, output_padding=output_padding)
+    hit = _MEM.get(key)
+    if hit is not None:
+        return hit
+    hit = _load_disk().get(key)
+    if hit is not None:
+        _MEM[key] = hit
+        return hit
+    if autotune_enabled():
+        return tune(kind, x_shape, w_shape, stride=stride, dilation=dilation,
+                    dtype=dtype, padding=padding,
+                    output_padding=output_padding)
+    _MEM[key] = DEFAULT_TILES   # negative-cache the lookup, not the timing
+    return DEFAULT_TILES
+
+
+__all__ = ["DEFAULT_TILES", "get_tiles", "tune", "make_key", "candidates",
+           "cache_path", "clear_memory_cache", "autotune_enabled"]

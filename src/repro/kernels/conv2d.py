@@ -4,12 +4,19 @@ The paper's decomposition reduces dilated/transposed convolutions to *dense*
 convolutions; this kernel is the TPU execution engine for those.  It computes
 an NHWC convolution as a sum of ``kh*kw`` shifted implicit-GEMM taps, keeping
 the MXU contraction on ``Cin`` and the lane dimension on a ``Cout`` tile.
+Rectangular kernels (``kh != kw`` — ENet's 5x1/1x5 asymmetric pair) are
+first-class: the tap loops, pads and halo are all per-dim.
 
 Tiling (per grid step): one batch element, ``TH`` output rows x full output
 width, one ``TC``-wide ``Cout`` tile.  The input row halo (``kh - stride``
 rows) is assembled *without overlapping BlockSpecs* by passing the input
 twice — the current row tile and the next row tile — and concatenating in
 VMEM (standard Pallas halo idiom).
+
+An optional fused epilogue (:mod:`repro.kernels.epilogue`, DESIGN.md §7) —
+folded BN scale/shift, PReLU, residual add — is applied to the fp32
+accumulator tile while it is still in VMEM, removing up to three elementwise
+HBM passes per convolution.
 
 VMEM per step ~ x_tile(2 * s*TH * Wp * Cin) + w(kh*kw*Cin*TC) + out(TH*W*TC),
 sized well under a v5e core's VMEM for every shape used in this repo.
@@ -24,12 +31,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.epilogue import EpilogueSpec, apply_tile, pack_args
 from repro.kernels.util import resolve_interpret
 
+_NO_EP = EpilogueSpec()
 
-def _conv_kernel(x_cur, x_nxt, w, out, *, th: int, kh: int, kw: int,
-                 stride: int, w_out: int):
+
+def _conv_kernel(x_cur, x_nxt, w, *rest, spec: EpilogueSpec, th: int,
+                 kh: int, kw: int, stride: int, w_out: int):
     """One (batch, row-tile, cout-tile) grid step."""
+    out = rest[-1]
+    ep_refs = rest[:-1]
     s = stride
     halo = kh - s
     # assemble the input window: s*TH rows + halo rows from the next tile
@@ -48,28 +60,40 @@ def _conv_kernel(x_cur, x_nxt, w, out, *, th: int, kh: int, kw: int,
                 (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32,
             )
+    if not spec.empty:
+        args = tuple(r[0] if name == "residual" else r[...]
+                     for name, r in zip(spec.slots, ep_refs))
+        acc = apply_tile(spec, acc, args, flat=th * w_out)
     out[0] = acc.reshape(th, w_out, out.shape[-1]).astype(out.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("stride", "padding", "th", "tc", "interpret"),
+    static_argnames=("stride", "padding", "th", "tc", "interpret", "epilogue"),
 )
 def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
            padding: str | int = "SAME", th: int = 8, tc: int = 128,
-           interpret: bool | None = None) -> jax.Array:
+           interpret: bool | None = None,
+           epilogue: EpilogueSpec | None = None,
+           scale: jax.Array | None = None, shift: jax.Array | None = None,
+           alpha: jax.Array | None = None,
+           residual: jax.Array | None = None) -> jax.Array:
     """Pallas dense convolution. NHWC x HWIO -> NHWC.  Differentiable: a
     ``jax.custom_vjp`` routes the input-gradient through the transposed-conv
     engine and the weight-gradient through tap-gather correlations
-    (:mod:`repro.core.adjoints`, DESIGN.md §6).
+    (:mod:`repro.core.adjoints`, DESIGN.md §6); the fused-epilogue path
+    differentiates by adjoint re-entry (``adjoints.fused_epilogue_bwd``).
 
     Args:
       x: (N, H, W, Cin).
-      w: (kh, kw, Cin, Cout).
+      w: (kh, kw, Cin, Cout) — rectangular kernels supported.
       stride: spatial stride (1 or 2 used in this repo).
       padding: "SAME", "VALID" or an explicit symmetric int.
       th: output rows per tile.  tc: Cout tile width (lane dim, 128 on MXU).
       interpret: None -> auto (interpret on CPU), or an explicit override.
+      epilogue: optional :class:`EpilogueSpec` fused into the kernel; the
+        spec's operands (``scale``/``shift``/``alpha``/``residual``) must be
+        passed to match (DESIGN.md §7).
     """
     interpret = resolve_interpret(interpret)
     kh, kw = w.shape[0], w.shape[1]
@@ -79,12 +103,24 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
         pads = (((kh - 1) // 2, kh // 2), ((kw - 1) // 2, kw // 2))
     else:  # VALID
         pads = ((0, 0), (0, 0))
-    return _conv2d_vjp(x, w, stride, pads, th, tc, interpret)
+    spec = _NO_EP if epilogue is None else epilogue
+    if spec.empty:
+        return _conv2d_vjp(x, w, stride, pads, th, tc, interpret)
+    eps = pack_args(spec, scale=scale, shift=shift, alpha=alpha,
+                    residual=residual)
+    return _conv2d_ep_vjp(x, w, eps, spec, stride, pads, th, tc, interpret)
 
 
-def _conv2d_impl(x: jax.Array, w: jax.Array, stride: int,
-                 pads: tuple[tuple[int, int], tuple[int, int]],
-                 th: int, tc: int, interpret: bool) -> jax.Array:
+def _chan_operand(v: jax.Array, cout: int, cout_p: int) -> jax.Array:
+    """Broadcast a scalar/per-channel operand to a padded (1, cout_p) row."""
+    from repro.kernels.epilogue import _chanvec
+
+    return jnp.pad(_chanvec(v, cout), (0, cout_p - cout)).reshape(1, cout_p)
+
+
+def _conv2d_raw(x: jax.Array, w: jax.Array, eps: tuple, spec: EpilogueSpec,
+                stride: int, pads: tuple[tuple[int, int], tuple[int, int]],
+                th: int, tc: int, interpret: bool) -> jax.Array:
     n, h, w_in, cin = x.shape
     kh, kw, _, cout = w.shape
     s = stride
@@ -124,16 +160,38 @@ def _conv2d_impl(x: jax.Array, w: jax.Array, stride: int,
     w_spec = pl.BlockSpec((kh, kw, cin, tc), lambda b, i, c: (0, 0, 0, c))
     out_spec = pl.BlockSpec((1, th, w_out, tc), lambda b, i, c: (b, i, 0, c))
 
+    # epilogue operands: channel vectors as padded (1, cout_p) rows tiled on
+    # the cout grid axis; the residual blocked exactly like the output
+    ep_in, ep_specs = [], []
+    for name, v in zip(spec.slots, eps):
+        if name == "residual":
+            if v.shape != (n, h_out, w_out, cout):
+                raise ValueError(f"residual shape {v.shape} != output "
+                                 f"{(n, h_out, w_out, cout)}")
+            ep_in.append(jnp.pad(v, ((0, 0), (0, h_out_p - h_out), (0, 0),
+                                     (0, cout_p - cout))))
+            ep_specs.append(pl.BlockSpec((1, th, w_out, tc),
+                                         lambda b, i, c: (b, i, 0, c)))
+        else:
+            ep_in.append(_chan_operand(v, cout, cout_p))
+            ep_specs.append(pl.BlockSpec((1, tc), lambda b, i, c: (0, c)))
+
     out = pl.pallas_call(
-        functools.partial(_conv_kernel, th=th, kh=kh, kw=kw, stride=s,
-                          w_out=w_out),
+        functools.partial(_conv_kernel, spec=spec, th=th, kh=kh, kw=kw,
+                          stride=s, w_out=w_out),
         grid=grid,
-        in_specs=[x_spec_cur, x_spec_nxt, w_spec],
+        in_specs=[x_spec_cur, x_spec_nxt, w_spec, *ep_specs],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((n, h_out_p, w_out, cout_p), x.dtype),
         interpret=interpret,
-    )(xp, xp, wp)
+    )(xp, xp, wp, *ep_in)
     return out[:, :h_out, :, :cout]
+
+
+def _conv2d_impl(x: jax.Array, w: jax.Array, stride: int,
+                 pads: tuple[tuple[int, int], tuple[int, int]],
+                 th: int, tc: int, interpret: bool) -> jax.Array:
+    return _conv2d_raw(x, w, (), _NO_EP, stride, pads, th, tc, interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -190,3 +248,36 @@ def _conv2d_bwd(stride, pads, th, tc, interpret, res, g):
 
 
 _conv2d_vjp.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused-epilogue VJP (DESIGN.md §7): the backward differentiates the
+# composition conv∘epilogue by re-entry — the conv cotangent flows through
+# the §6 adjoints above, the epilogue gradients are elementwise fp32 ops.
+# ---------------------------------------------------------------------------
+
+def _conv2d_ep_impl(x, w, eps, spec, stride, pads, th, tc, interpret):
+    return _conv2d_raw(x, w, eps, spec, stride, pads, th, tc, interpret)
+
+
+_conv2d_ep_vjp = jax.custom_vjp(_conv2d_ep_impl,
+                                nondiff_argnums=(3, 4, 5, 6, 7, 8))
+
+
+def _conv2d_ep_fwd(x, w, eps, spec, stride, pads, th, tc, interpret):
+    y = _conv2d_ep_impl(x, w, eps, spec, stride, pads, th, tc, interpret)
+    return y, (x, w, eps)
+
+
+def _conv2d_ep_bwd(spec, stride, pads, th, tc, interpret, res, g):
+    from repro.core import adjoints
+
+    x, w, eps = res
+
+    def conv_apply(xx, ww):
+        return _conv2d_vjp(xx, ww, stride, pads, th, tc, interpret)
+
+    return adjoints.fused_epilogue_bwd(conv_apply, spec, x, w, eps, g)
+
+
+_conv2d_ep_vjp.defvjp(_conv2d_ep_fwd, _conv2d_ep_bwd)

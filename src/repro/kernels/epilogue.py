@@ -1,0 +1,155 @@
+"""Fused elementwise epilogues for the decomposition engine (DESIGN.md §7).
+
+Every ENet bottleneck / ESP module used to pay three extra elementwise HBM
+passes after each fused convolution: BN scale/shift, PReLU, and a residual
+add.  The decomposed kernels are compute-lean enough that those passes
+dominate the memory roofline — so they are applied *inside* the Pallas
+kernels, on the fp32 accumulator tile while it is still in VMEM.
+
+An :class:`EpilogueSpec` is a small frozen (hashable — it rides the
+``static_argnames`` of the jitted kernel wrappers) description of *which*
+ops run and in what order::
+
+    y = conv(x, w)                       # fp32 accumulator tile
+    y = y * scale + shift                if spec.bn        (folded BN)
+    y = y + residual                     if spec.residual == "pre_act"
+    y = where(y >= 0, y, alpha * y)      if spec.prelu
+    y = y + residual                     if spec.residual == "post_act"
+
+The operand *arrays* (``scale``/``shift`` per ``Cout`` channel, ``alpha``
+scalar or per-channel, ``residual`` with the output's NHWC shape) travel as
+ordinary traced inputs packed by :func:`pack_args`; the spec decides which
+slots exist, so each (spec, shape) pair compiles exactly the operands it
+needs.
+
+BN is *folded*: scale/shift are a single multiply-add, computed from the BN
+parameters (and, at inference, running statistics) by
+``repro.models.common.fold_bn`` — batch-statistics normalisation cannot be
+fused into a single output pass because the statistics are a function of the
+very output being produced.
+
+:func:`apply_reference` is the unfused oracle — the XLA backend uses it
+post-conv, the fused kernels' VJPs differentiate through it
+(``adjoints.fused_epilogue_bwd``), and the parity tests pin
+``fused kernel == unfused kernel + apply_reference``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: residual placement values
+_RESIDUAL = ("none", "pre_act", "post_act")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpilogueSpec:
+    """Static description of a fused epilogue (hashable: jit-static)."""
+
+    bn: bool = False            # folded BN: y * scale + shift
+    prelu: bool = False         # PReLU with learnable slope alpha
+    residual: str = "none"      # "none" | "pre_act" | "post_act"
+
+    def __post_init__(self):
+        if self.residual not in _RESIDUAL:
+            raise ValueError(f"residual must be one of {_RESIDUAL}, "
+                             f"got {self.residual!r}")
+
+    @property
+    def empty(self) -> bool:
+        return not (self.bn or self.prelu or self.residual != "none")
+
+    @property
+    def slots(self) -> tuple[str, ...]:
+        """Operand slot names, in packing order."""
+        out = []
+        if self.bn:
+            out += ["scale", "shift"]
+        if self.prelu:
+            out.append("alpha")
+        if self.residual != "none":
+            out.append("residual")
+        return tuple(out)
+
+
+def pack_args(spec: EpilogueSpec, *, scale=None, shift=None, alpha=None,
+              residual=None) -> tuple[jax.Array, ...]:
+    """Collect the operand arrays a spec needs into its canonical tuple.
+
+    Raises if a required operand is missing or a superfluous one is given —
+    the spec is the single source of truth for what the kernel receives.
+    """
+    given = {"scale": scale, "shift": shift, "alpha": alpha,
+             "residual": residual}
+    for name, v in given.items():
+        if (name in spec.slots) != (v is not None):
+            need = "requires" if name in spec.slots else "does not take"
+            raise ValueError(f"epilogue {spec} {need} operand {name!r}")
+    return tuple(given[name] for name in spec.slots)
+
+
+def _chanvec(v: jax.Array, cout: int) -> jax.Array:
+    """Broadcast a scalar/per-channel epilogue operand to a (cout,) vector."""
+    v = jnp.asarray(v, jnp.float32).reshape(-1)
+    if v.shape[0] not in (1, cout):
+        raise ValueError(f"epilogue channel operand has {v.shape[0]} entries, "
+                         f"expected 1 or {cout}")
+    return jnp.broadcast_to(v, (cout,))
+
+
+def apply_reference(spec: EpilogueSpec, z: jax.Array,
+                    args: tuple[jax.Array, ...]) -> jax.Array:
+    """Unfused oracle: the epilogue as plain jnp ops on the conv output.
+
+    Computes in fp32 (matching the fused kernels, which apply the epilogue
+    on the fp32 accumulator before the output cast) and casts back to
+    ``z.dtype``.
+    """
+    if spec.empty:
+        return z
+    it = iter(args)
+    cout = z.shape[-1]
+    y = z.astype(jnp.float32)
+    if spec.bn:
+        y = y * _chanvec(next(it), cout) + _chanvec(next(it), cout)
+    if spec.prelu:
+        alpha = _chanvec(next(it), cout)
+        y_res = next(it).astype(jnp.float32) if spec.residual == "pre_act" \
+            else None
+        if y_res is not None:
+            y = y + y_res
+        y = jnp.where(y >= 0, y, alpha * y)
+        if spec.residual == "post_act":
+            y = y + next(it).astype(jnp.float32)
+    elif spec.residual != "none":
+        y = y + next(it).astype(jnp.float32)
+    return y.astype(z.dtype)
+
+
+def apply_tile(spec: EpilogueSpec, acc: jax.Array,
+               refs: tuple, *, flat: int) -> jax.Array:
+    """Apply the epilogue inside a Pallas kernel body.
+
+    ``acc`` is the fp32 accumulator reshaped to ``(flat, tc)``; ``refs`` are
+    the epilogue operand *blocks* in slot order — channel vectors arrive as
+    ``(1, tc)`` tiles, the residual as a block reshapable to ``(flat, tc)``.
+    """
+    it = iter(refs)
+    if spec.bn:
+        acc = acc * next(it).reshape(1, -1) + next(it).reshape(1, -1)
+    if spec.prelu:
+        alpha = next(it).reshape(1, -1)
+        if spec.residual == "pre_act":
+            acc = acc + next(it).reshape(flat, -1).astype(jnp.float32)
+        acc = jnp.where(acc >= 0, acc, alpha * acc)
+        if spec.residual == "post_act":
+            acc = acc + next(it).reshape(flat, -1).astype(jnp.float32)
+    elif spec.residual != "none":
+        acc = acc + next(it).reshape(flat, -1).astype(jnp.float32)
+    return acc
+
+
+__all__ = ["EpilogueSpec", "pack_args", "apply_reference", "apply_tile"]

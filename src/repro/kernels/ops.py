@@ -18,27 +18,31 @@ from repro.kernels.matmul import matmul as _matmul
 from repro.kernels.transposed_conv import transposed_conv2d as _tconv
 
 
-def conv2d(x, w, *, stride=1, padding="SAME", interpret=None):
+def conv2d(x, w, *, stride=1, padding="SAME", interpret=None, **epilogue_kw):
+    """Dense conv — rectangular kernels and fused epilogues supported."""
     if x.ndim != 4 or w.ndim != 4 or x.shape[-1] != w.shape[2]:
         raise ValueError(f"bad conv shapes {x.shape} x {w.shape}")
-    return _conv2d(x, w, stride=stride, padding=padding, interpret=interpret)
+    return _conv2d(x, w, stride=stride, padding=padding, interpret=interpret,
+                   **epilogue_kw)
 
 
-def dilated_conv2d(x, w, dilation, *, stride=1, interpret=None):
+def dilated_conv2d(x, w, dilation, *, stride=1, interpret=None, **epilogue_kw):
     if w.shape[0] != w.shape[1]:
         raise ValueError("square kernels only")
-    return _dilated(x, w, dilation, stride=stride, interpret=interpret)
+    return _dilated(x, w, dilation, stride=stride, interpret=interpret,
+                    **epilogue_kw)
 
 
 def transposed_conv2d(x, w, *, stride=2, padding=None, output_padding=1,
-                      interpret=None):
+                      interpret=None, **epilogue_kw):
     """Fused decomposed transposed conv — any square (k, stride)."""
     if x.ndim != 4 or w.ndim != 4 or x.shape[-1] != w.shape[2]:
         raise ValueError(f"bad conv shapes {x.shape} x {w.shape}")
     if w.shape[0] != w.shape[1]:
         raise ValueError("square kernels only")
     return _tconv(x, w, stride=stride, padding=padding,
-                  output_padding=output_padding, interpret=interpret)
+                  output_padding=output_padding, interpret=interpret,
+                  **epilogue_kw)
 
 
 def matmul(a, b, *, interpret=None):

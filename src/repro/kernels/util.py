@@ -2,7 +2,20 @@
 
 from __future__ import annotations
 
+import functools
+
 import jax
+
+
+@functools.lru_cache(maxsize=1)
+def default_backend() -> str:
+    """The JAX default backend platform, probed once per process.
+
+    ``jax.default_backend()`` walks the live backend registry; every kernel
+    call funnels through :func:`resolve_interpret`, so the probe is memoized
+    (the attached backend cannot change within a process).
+    """
+    return jax.default_backend()
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
@@ -14,5 +27,5 @@ def resolve_interpret(interpret: bool | None) -> bool:
     debug a kernel on TPU, or ``False`` to assert compilation).
     """
     if interpret is None:
-        return jax.default_backend() == "cpu"
+        return default_backend() == "cpu"
     return interpret

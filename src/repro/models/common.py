@@ -1,9 +1,16 @@
 """Shared building blocks for the segmentation model zoo (ENet, ESPNet).
 
-Batch norm uses batch statistics (training form, as in the ENet paper);
+BN in the model zoo is carried in *folded* form (DESIGN.md §7): the
+parameters fold — optionally together with fixed statistics — into a single
+per-channel ``scale``/``shift`` multiply-add (:func:`fold_bn`), which is
+what the fused conv epilogues consume.  Batch-statistics normalisation
+(:func:`bn`, the ENet paper's training form) is kept as a reference op, but
+it cannot be fused into a single output pass — its statistics are a function
+of the very output being produced — so the models emit epilogue specs
+instead of calling it post-hoc.
+
 PReLU carries a single learnable slope per layer.  Kept in one place so a
-change (e.g. the planned fused BN/PReLU epilogues, ROADMAP) hits every
-model at once.
+change hits every model at once.
 """
 
 from __future__ import annotations
@@ -28,10 +35,29 @@ def bn_init(c: int, dtype=jnp.float32) -> dict:
 
 
 def bn(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
-    """Batch norm with batch statistics (training form)."""
+    """Batch norm with batch statistics (training form; reference only)."""
     mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
     var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
     return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
 
 
-__all__ = ["conv_init", "prelu", "bn_init", "bn"]
+def fold_bn(p: dict, mu: jax.Array | None = None,
+            var: jax.Array | None = None,
+            eps: float = 1e-5) -> tuple[jax.Array, jax.Array]:
+    """Fold BN params (+ optional fixed statistics) to ``(scale, shift)``.
+
+    ``y = x * scale + shift`` — the single multiply-add the fused conv
+    epilogues consume (DESIGN.md §7).  With ``mu``/``var`` given (running
+    statistics at inference) the fold is the classic
+    ``scale = g / sqrt(var + eps)``, ``shift = b - mu * scale``; without
+    them the fold is the pure learnable affine (identity statistics), which
+    is how the model zoo trains.
+    """
+    g, b = p["g"], p["b"]
+    if mu is None:
+        return g, b
+    scale = g * jax.lax.rsqrt(var + eps)
+    return scale, b - mu * scale
+
+
+__all__ = ["conv_init", "prelu", "bn_init", "bn", "fold_bn"]

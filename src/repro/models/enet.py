@@ -5,6 +5,14 @@ and every transposed convolution through ``core.transposed`` (weight
 decomposition) — the technique is the execution engine, not a demo.  Layer
 inventory matches ``core.enet_spec`` (the cycle-model workload table).
 
+Every BN/PReLU/residual that used to follow a convolution as separate
+elementwise HBM passes is emitted as a *fused epilogue spec* instead
+(DESIGN.md §7): BN is carried in folded ``scale``/``shift`` form
+(``common.fold_bn``), PReLU and the bottleneck residual add ride the same
+kernel output pass.  The 5x1/1x5 asymmetric pair runs through the engine's
+rectangular-kernel dense path (no more silent lax fallback under
+``backend='pallas'``).
+
 This is the paper's own workload: ``examples/train_enet.py`` trains it end to
 end on synthetic Cityscapes-like data.
 """
@@ -17,10 +25,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.decompose import conv2d
-from repro.models.common import bn as _bn
+from repro.kernels.epilogue import EpilogueSpec
 from repro.models.common import bn_init as _bn_init
-from repro.models.common import conv_init
-from repro.models.common import prelu as _prelu
+from repro.models.common import conv_init, fold_bn
+
+# the two epilogue shapes ENet uses: BN+PReLU after reduce/mid convs, and
+# BN + residual-add + PReLU closing every bottleneck
+_EP_BN_ACT = EpilogueSpec(bn=True, prelu=True)
+_EP_BN_RES_ACT = EpilogueSpec(bn=True, prelu=True, residual="pre_act")
 
 
 def _conv_init(key, k: int, cin: int, cout: int, dtype=jnp.float32):
@@ -36,6 +48,10 @@ def _bottleneck_init(key, c: int, kind: str = "regular", cin: int | None = None,
          "a3": jnp.full((1,), 0.25, dtype),
          "bn1": _bn_init(ci, dtype), "bn2": _bn_init(ci, dtype),
          "bn3": _bn_init(c, dtype)}
+    # folded BN does not re-normalise per batch, so the residual cascade
+    # would double activation variance per bottleneck; zero-init the closing
+    # scale (ResNet "zero-init residual") so each block starts as identity
+    p["bn3"]["g"] = jnp.zeros((c,), dtype)
     if kind == "down":
         p["reduce"] = _conv_init(ks[0], 2, cin, ci, dtype)
         p["conv"] = _conv_init(ks[1], 3, ci, ci, dtype)
@@ -60,44 +76,44 @@ def _bottleneck(p: dict, x: jax.Array, kind: str, c: int, dilation: int = 1,
                 decomposed: bool = True, strategy: str = "batched",
                 backend: str = "xla") -> jax.Array:
     """kind: regular | dilated | asym | down | up."""
-    _DIMS = ("NHWC", "HWIO", "NHWC")
+    s1, b1 = fold_bn(p["bn1"])
+    ep1 = dict(epilogue=_EP_BN_ACT, scale=s1, shift=b1, alpha=p["a1"])
     if kind == "down":
-        h = conv2d(x, p["reduce"], stride=2, padding=0, backend=backend)
+        h = conv2d(x, p["reduce"], stride=2, padding=0, backend=backend, **ep1)
         skip = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
                                      (1, 2, 2, 1), "VALID")
         pad_c = c - x.shape[-1]
         skip = jnp.pad(skip, ((0, 0), (0, 0), (0, 0), (0, pad_c)))
     elif kind == "up":
-        h = conv2d(x, p["reduce"], backend=backend)
+        h = conv2d(x, p["reduce"], backend=backend, **ep1)
         skip = conv2d(x, p["skip"], backend=backend)
         # nearest-neighbour unpool stand-in for max-unpool indices
         skip = jnp.repeat(jnp.repeat(skip, 2, axis=1), 2, axis=2)
     else:
-        h = conv2d(x, p["reduce"], backend=backend)
+        h = conv2d(x, p["reduce"], backend=backend, **ep1)
         skip = x
-    h = _prelu(p["a1"], _bn(p["bn1"], h))
 
+    s2, b2 = fold_bn(p["bn2"])
+    ep2 = dict(epilogue=_EP_BN_ACT, scale=s2, shift=b2, alpha=p["a2"])
     if kind == "asym":
-        # 5x1/1x5 pair pads one dim only — not expressible through the
-        # engine's symmetric-padding dispatch; stays on lax (group "general"
-        # in the cycle model either way).
-        h = jax.lax.conv_general_dilated(h, p["conv_v"], (1, 1),
-                                         [(2, 2), (0, 0)],
-                                         dimension_numbers=_DIMS)
-        h = jax.lax.conv_general_dilated(h, p["conv_h"], (1, 1),
-                                         [(0, 0), (2, 2)],
-                                         dimension_numbers=_DIMS)
+        # 5x1/1x5 pair: rectangular kernels through the engine's dense path
+        # (SAME pads one dim only); BN2/PReLU fuse into the second conv
+        h = conv2d(h, p["conv_v"], backend=backend)
+        h = conv2d(h, p["conv_h"], backend=backend, **ep2)
     elif kind == "up":
         h = conv2d(h, p["deconv"], stride=2, transposed=True,
-                   output_padding=1, decomposed=decomposed, backend=backend)
+                   output_padding=1, decomposed=decomposed, backend=backend,
+                   **ep2)
     elif kind == "dilated":
         h = conv2d(h, p["conv"], dilation=dilation, decomposed=decomposed,
-                   strategy=strategy, backend=backend)
+                   strategy=strategy, backend=backend, **ep2)
     else:
-        h = conv2d(h, p["conv"], backend=backend)
-    h = _prelu(p["a2"], _bn(p["bn2"], h))
-    h = conv2d(h, p["expand"], backend=backend)
-    return _prelu(p["a3"], _bn(p["bn3"], h) + skip)
+        h = conv2d(h, p["conv"], backend=backend, **ep2)
+
+    # expand projection closes the bottleneck: BN3, +skip, PReLU — one pass
+    s3, b3 = fold_bn(p["bn3"])
+    return conv2d(h, p["expand"], backend=backend, epilogue=_EP_BN_RES_ACT,
+                  scale=s3, shift=b3, alpha=p["a3"], residual=skip)
 
 
 # stage layout: (name, kind, channels, dilation)
@@ -134,9 +150,10 @@ def forward(params: dict, x: jax.Array, decomposed: bool = True,
 
     ``backend='pallas'`` executes every conv through the fused Pallas engine
     (:mod:`repro.kernels`) instead of composed XLA convs — including the 1x1
-    reduce/expand projections and the stem/head, so a pallas forward is
-    all-pallas (the 5x1/1x5 asymmetric pair is the lone lax exception).
-    The whole forward is differentiable on both backends (DESIGN.md §6).
+    reduce/expand projections, the stem/head, and the rectangular 5x1/1x5
+    asymmetric pair — so a pallas forward is all-pallas, with BN/PReLU/
+    residual epilogues fused into the kernels (DESIGN.md §7).  The whole
+    forward is differentiable on both backends (DESIGN.md §6).
     """
     h = conv2d(x, params["initial"], stride=2, backend=backend)
     pool = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),

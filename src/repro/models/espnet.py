@@ -13,7 +13,10 @@ ENet, uses the technique as its execution engine.
 Layer inventory matches :mod:`repro.core.espnet_spec` (the cycle-model
 workload table).  The forward is differentiable on both backends
 (DESIGN.md §6): ``jax.grad`` through ``backend='pallas'`` exercises the
-custom VJPs of all three fused kernels.
+custom VJPs of all three fused kernels.  The stem's BN/PReLU and the
+decoder's skip-add are emitted as fused epilogue specs (DESIGN.md §7);
+the ESP module's post-concat BN/PReLU — which follows the HFF merge, not
+any single conv — runs as the same folded-BN oracle in one pass.
 
 This is a compact variant (alpha2=2, alpha3=3, K=4 branches, light deconv
 decoder) — the module structure, not the exact ESPNet-C widths.
@@ -27,12 +30,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.decompose import conv2d
-from repro.models.common import bn as _bn
+from repro.kernels.epilogue import EpilogueSpec, apply_reference
 from repro.models.common import bn_init as _bn_init
 from repro.models.common import conv_init as _conv_init
-from repro.models.common import prelu as _prelu
+from repro.models.common import fold_bn as _fold_bn
 
 ESP_DILATIONS = (1, 2, 4, 8)   # K = 4 pyramid branches (d = 2**k)
+
+_EP_BN_ACT = EpilogueSpec(bn=True, prelu=True)
+_EP_RES = EpilogueSpec(residual="post_act")
 
 
 def _esp_init(key, cin: int, cout: int, dtype=jnp.float32) -> dict:
@@ -44,6 +50,10 @@ def _esp_init(key, cin: int, cout: int, dtype=jnp.float32) -> dict:
     ks = jax.random.split(key, K + 1)
     p = {"reduce": _conv_init(ks[0], 1, 1, cin, cb, dtype),
          "bn": _bn_init(cout, dtype), "a": jnp.full((1,), 0.25, dtype)}
+    # folded BN does not re-normalise per batch; the HFF cumulative sums and
+    # the residual grow module variance ~(K+1)/2 + 1 per ESP — scale the
+    # folded BN init down so the stack starts at unit activation scale
+    p["bn"]["g"] = p["bn"]["g"] / jnp.sqrt((K + 1) / 2 + 1).astype(dtype)
     for i, d in enumerate(ESP_DILATIONS):
         p[f"br{d}"] = _conv_init(ks[i + 1], 3, 3, cb, cb, dtype)
     return p
@@ -74,7 +84,11 @@ def _esp(p: dict, x: jax.Array, stride: int = 1, decomposed: bool = True,
     y = jnp.concatenate(fused, axis=-1)
     if stride == 1 and x.shape[-1] == y.shape[-1]:
         y = y + x                   # residual (regular ESP only)
-    return _prelu(p["a"], _bn(p["bn"], y))
+    # the module's BN/PReLU sits after the HFF concat, not after any single
+    # conv — it cannot fuse into a branch kernel, so it runs as the same
+    # folded-BN epilogue oracle in ONE elementwise pass (DESIGN.md §7)
+    sc, sh = _fold_bn(p["bn"])
+    return apply_reference(_EP_BN_ACT, y, (sc, sh, p["a"]))
 
 
 def init_params(key, num_classes: int = 19, alpha2: int = 2, alpha3: int = 3,
@@ -104,8 +118,10 @@ def forward(params: dict, x: jax.Array, decomposed: bool = True,
             alpha2: int = 2, alpha3: int = 3) -> jax.Array:
     """x: (N, H, W, 3) -> logits (N, H, W, classes).  H, W divisible by 8."""
     kw = dict(decomposed=decomposed, strategy=strategy, backend=backend)
-    h = conv2d(x, params["stem"], stride=2, backend=backend)     # H/2
-    h = _prelu(params["stem_a"], _bn(params["stem_bn"], h))
+    sc, sh = _fold_bn(params["stem_bn"])
+    h = conv2d(x, params["stem"], stride=2, backend=backend,     # H/2
+               epilogue=_EP_BN_ACT, scale=sc, shift=sh,
+               alpha=params["stem_a"])
     h = _esp(params["down1"], h, stride=2, **kw)                 # H/4, 64
     for i in range(alpha2):
         h = _esp(params[f"l2_{i}"], h, **kw)
@@ -114,9 +130,10 @@ def forward(params: dict, x: jax.Array, decomposed: bool = True,
     for i in range(alpha3):
         h = _esp(params[f"l3_{i}"], h, **kw)
     h = conv2d(h, params["head"], backend=backend)               # H/8, C
+    # decoder skip-add fuses into the transposed kernel's output pass
     h = conv2d(h, params["up1"], stride=2, transposed=True, output_padding=1,
-               decomposed=decomposed, backend=backend)           # H/4
-    h = h + skip
+               decomposed=decomposed, backend=backend,
+               epilogue=_EP_RES, residual=skip)                  # H/4
     h = conv2d(h, params["up2"], stride=2, transposed=True, output_padding=1,
                decomposed=decomposed, backend=backend)           # H/2
     return conv2d(h, params["up3"], stride=2, transposed=True,

@@ -1,0 +1,26 @@
+"""Shared test fixtures.
+
+The autotune cache is machine-global state (``~/.cache/repro-autotune``);
+tests and the benchmark helpers some tests invoke must never write noise
+timings there, so every test session gets a throwaway cache directory.
+"""
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_autotune_cache(tmp_path_factory):
+    import os
+
+    from repro.kernels import autotune
+
+    prev = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = str(
+        tmp_path_factory.mktemp("autotune-cache"))
+    autotune.clear_memory_cache()
+    yield
+    if prev is None:
+        os.environ.pop("REPRO_AUTOTUNE_CACHE", None)
+    else:
+        os.environ["REPRO_AUTOTUNE_CACHE"] = prev
+    autotune.clear_memory_cache()

@@ -1,0 +1,132 @@
+"""Autotune cache behaviour (DESIGN.md §7): round-trip, determinism,
+invalidation-by-filename, and the no-sweep-on-cold-miss contract.
+"""
+
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import autotune as at
+
+GEOM = dict(x_shape=(1, 12, 12, 4), w_shape=(3, 3, 4, 8))
+
+
+@pytest.fixture()
+def cache_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    at.clear_memory_cache()
+    yield tmp_path
+    at.clear_memory_cache()
+
+
+def test_make_key_is_geometry_exact():
+    k1 = at.make_key("dense", (1, 16, 16, 8), (3, 3, 8, 16))
+    k2 = at.make_key("dense", (1, 16, 16, 8), (3, 3, 8, 16), stride=2)
+    k3 = at.make_key("dilated", (1, 16, 16, 8), (3, 3, 8, 16))
+    k4 = at.make_key("dense", (1, 16, 16, 8), (3, 3, 8, 16),
+                     dtype=jnp.bfloat16)
+    # padding changes the output extent, hence the tiling: distinct keys
+    k5 = at.make_key("dense", (1, 16, 16, 8), (3, 3, 8, 16), padding=0)
+    k6 = at.make_key("tconv", (1, 16, 16, 8), (3, 3, 8, 16), stride=2,
+                     output_padding=0)
+    k7 = at.make_key("tconv", (1, 16, 16, 8), (3, 3, 8, 16), stride=2)
+    assert len({k1, k2, k3, k4, k5, k6, k7}) == 7
+    with pytest.raises(ValueError):
+        at.make_key("conv3d", (1, 16, 16, 8), (3, 3, 8, 16))
+
+
+def test_candidates_clip_to_geometry():
+    cands = at.candidates(h_out=6, cout=32)
+    assert cands and all(th <= max(6, 4) and tc <= 64 for th, tc in cands)
+    big = at.candidates(h_out=64, cout=512)
+    assert (32, 256) in big
+
+
+def test_cold_miss_returns_defaults_without_sweeping(cache_dir, monkeypatch):
+    monkeypatch.setattr(at, "_time_candidate",
+                        lambda *a, **k: pytest.fail("swept on a cold miss"))
+    assert at.get_tiles("dense", **GEOM) == at.DEFAULT_TILES
+    assert not at.cache_path().exists()     # pure lookup — nothing persisted
+
+
+def test_tune_roundtrip_and_determinism(cache_dir, monkeypatch):
+    tiles = at.tune("dense", **GEOM, cands=[(4, 64), (8, 64)], iters=1)
+    assert tiles in [(4, 64), (8, 64)]
+
+    # on-disk layout: schema + entries keyed by make_key
+    raw = json.loads(at.cache_path().read_text())
+    key = at.make_key("dense", **GEOM)
+    assert raw["schema"] == at._SCHEMA
+    assert raw["entries"][key] == list(tiles)
+
+    # a fresh process (cleared memory cache) serves the disk entry and
+    # NEVER re-times — cached tiles are deterministic across runs
+    at.clear_memory_cache()
+    monkeypatch.setattr(at, "_time_candidate",
+                        lambda *a, **k: pytest.fail("re-timed a cache hit"))
+    assert at.get_tiles("dense", **GEOM) == tiles
+    assert at.get_tiles("dense", **GEOM) == tiles     # mem-cache hit too
+
+
+def test_enabled_env_sweeps_on_miss(cache_dir, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    calls = []
+
+    def fake_time(call, iters):
+        calls.append(1)
+        return float(len(calls))        # first candidate wins
+
+    monkeypatch.setattr(at, "_time_candidate", fake_time)
+    monkeypatch.setattr(at, "TH_CANDIDATES", (4, 8))
+    monkeypatch.setattr(at, "TC_CANDIDATES", (64,))
+    tiles = at.get_tiles("dense", **GEOM)
+    assert tiles == (4, 64) and len(calls) == 2
+    assert at.cache_path().exists()
+
+
+def test_aot_tune_key_matches_dispatcher_key(cache_dir, monkeypatch):
+    """An ahead-of-time ``tune()`` with engine defaults must be served to
+    dispatcher calls, whose padding/output_padding arrive resolved."""
+    monkeypatch.setattr(at, "_time_candidate", lambda call, iters: 1.0)
+    tiles = at.tune("tconv", (1, 6, 6, 4), (3, 3, 4, 8), stride=2,
+                    cands=[(4, 64)], iters=1)
+    # dispatcher-style key: p resolved to (k-1)//2 = 1, op explicit 1
+    assert at.get_tiles("tconv", (1, 6, 6, 4), (3, 3, 4, 8), stride=2,
+                        padding=1, output_padding=1) == tiles
+    tiles_d = at.tune("dense", (1, 8, 8, 4), (3, 3, 4, 8),
+                      cands=[(8, 64)], iters=1)
+    assert at.get_tiles("dense", (1, 8, 8, 4), (3, 3, 4, 8),
+                        padding=None) == tiles_d
+
+
+def test_corrupt_cache_file_is_ignored(cache_dir):
+    path = at.cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text("{not json")
+    at.clear_memory_cache()
+    assert at.get_tiles("dense", **GEOM) == at.DEFAULT_TILES
+
+
+def test_dispatcher_resolves_tiles_through_autotune(cache_dir, monkeypatch):
+    """decompose.conv2d consults the table when th/tc are unset."""
+    import jax
+
+    from repro.core.decompose import conv2d
+
+    seen = []
+    real = at.get_tiles
+
+    def spy(kind, xs, ws, **kw):
+        seen.append((kind, xs, ws))
+        return real(kind, xs, ws, **kw)
+
+    monkeypatch.setattr(at, "get_tiles", spy)
+    x = jax.numpy.ones((1, 8, 8, 4))
+    w = jax.numpy.ones((3, 3, 4, 8))
+    conv2d(x, w, backend="pallas")
+    assert seen and seen[0][0] == "dense"
+    seen.clear()
+    conv2d(x, w, backend="pallas", th=8, tc=128)   # explicit tiles: no lookup
+    assert not seen

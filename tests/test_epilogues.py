@@ -1,0 +1,236 @@
+"""Fused-epilogue parity (DESIGN.md §7): for every engine and spec shape,
+the fused kernel computes exactly ``unfused kernel + apply_reference`` —
+forward and gradients, pallas and xla.
+
+Three pins per (engine, spec) cell:
+
+* **fused == unfused + reference** on the pallas engine (the kernel applies
+  the epilogue on the fp32 accumulator in VMEM; the reference applies it as
+  separate jnp passes);
+* **pallas == xla** through the dispatcher (the xla backend applies the
+  identical reference oracle post-conv);
+* **gradient parity** across backends for all operands, including the
+  epilogue's own (``scale``/``shift``/``alpha``/``residual``) — the fused
+  VJP differentiates by adjoint re-entry (``adjoints.fused_epilogue_bwd``).
+
+The fast subset runs in tier-1; the full cross grid is ``slow``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core.decompose import conv2d
+from repro.kernels import ops
+from repro.kernels.epilogue import EpilogueSpec, apply_reference, pack_args
+
+SPECS = {
+    "bn": EpilogueSpec(bn=True),
+    "prelu": EpilogueSpec(prelu=True),
+    "bn_act": EpilogueSpec(bn=True, prelu=True),
+    "bn_res_act": EpilogueSpec(bn=True, prelu=True, residual="pre_act"),
+    "act_res": EpilogueSpec(prelu=True, residual="post_act"),
+    "res": EpilogueSpec(residual="post_act"),
+}
+
+# (name, conv kwargs, x shape, w shape) — engine geometries
+FAST_GEOMS = [
+    ("dense_s1", dict(), (1, 9, 8, 3), (3, 3, 3, 5)),
+    ("dilated_d2", dict(dilation=2), (1, 10, 9, 3), (3, 3, 3, 4)),
+    ("tconv_s2", dict(stride=2, transposed=True, output_padding=1),
+     (1, 5, 6, 3), (3, 3, 3, 4)),
+]
+SLOW_GEOMS = [
+    ("dense_s2", dict(stride=2), (1, 9, 8, 3), (3, 3, 3, 4)),
+    ("dilated_d3", dict(dilation=3), (1, 12, 11, 3), (3, 3, 3, 4)),
+    ("dilated_d2_s2", dict(dilation=2, stride=2), (1, 12, 10, 3), (3, 3, 3, 4)),
+    ("tconv_s2_k2", dict(stride=2, transposed=True, output_padding=0),
+     (1, 6, 5, 3), (2, 2, 3, 4)),
+    ("tconv_s3_k5", dict(stride=3, transposed=True, output_padding=1),
+     (1, 5, 5, 2), (5, 5, 2, 3)),
+    ("tconv_s4_k2", dict(stride=4, transposed=True, output_padding=1),
+     (1, 4, 5, 2), (2, 2, 2, 3)),   # k < s: zero conv planes, live epilogue
+]
+FAST_SPECS = ["bn_act", "bn_res_act"]
+
+
+def _operands(spec: EpilogueSpec, kw, xs, ws):
+    """Deterministic epilogue operands for one (spec, geometry) cell."""
+    keys = jax.random.split(jax.random.PRNGKey(sum(xs) + sum(ws)), 6)
+    x = jax.random.normal(keys[0], xs, jnp.float32)
+    w = jax.random.normal(keys[1], ws, jnp.float32)
+    cout = ws[-1]
+    out_shape = jax.eval_shape(
+        lambda x, w: conv2d(x, w, **kw), x, w).shape
+    full = {
+        "scale": jax.random.normal(keys[2], (cout,)) * 0.3 + 1.0,
+        "shift": jnp.linspace(-0.7, 0.7, cout),
+        "alpha": jnp.full((1,), 0.25),
+        "residual": jax.random.normal(keys[3], out_shape),
+    }
+    return x, w, {k: full[k] for k in spec.slots}
+
+
+def _fused_vs_reference(geom, spec_name):
+    _, kw, xs, ws = geom
+    spec = SPECS[spec_name]
+    x, w, eops = _operands(spec, kw, xs, ws)
+    fused = conv2d(x, w, backend="pallas", epilogue=spec, **eops, **kw)
+    z = conv2d(x, w, backend="pallas", **kw)
+    want = apply_reference(spec, z, pack_args(spec, **eops))
+    assert fused.shape == want.shape
+    assert_allclose(np.asarray(fused), np.asarray(want), rtol=2e-5, atol=2e-5)
+    via_xla = conv2d(x, w, backend="xla", epilogue=spec, **eops, **kw)
+    assert_allclose(np.asarray(fused), np.asarray(via_xla),
+                    rtol=5e-5, atol=5e-5)
+
+
+def _grad_parity(geom, spec_name):
+    _, kw, xs, ws = geom
+    spec = SPECS[spec_name]
+    x, w, eops = _operands(spec, kw, xs, ws)
+    names = list(eops)
+
+    def loss(backend):
+        def f(x, w, *ev):
+            y = conv2d(x, w, backend=backend, epilogue=spec,
+                       **dict(zip(names, ev)), **kw)
+            return jnp.sum(jnp.sin(y))
+        return f
+
+    argnums = tuple(range(2 + len(names)))
+    gs_x = jax.grad(loss("xla"), argnums)(x, w, *eops.values())
+    gs_p = jax.grad(loss("pallas"), argnums)(x, w, *eops.values())
+    for name, a, b in zip(["x", "w", *names], gs_p, gs_x):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4,
+                        err_msg=f"{geom[0]}/{spec_name}/d{name}")
+
+
+@pytest.mark.parametrize("spec_name", FAST_SPECS)
+@pytest.mark.parametrize("geom", FAST_GEOMS, ids=lambda g: g[0])
+def test_fused_equals_reference_fast(geom, spec_name):
+    _fused_vs_reference(geom, spec_name)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+@pytest.mark.parametrize("geom", FAST_GEOMS + SLOW_GEOMS, ids=lambda g: g[0])
+def test_fused_equals_reference_grid(geom, spec_name):
+    _fused_vs_reference(geom, spec_name)
+
+
+@pytest.mark.parametrize("spec_name", FAST_SPECS)
+@pytest.mark.parametrize("geom", FAST_GEOMS, ids=lambda g: g[0])
+def test_gradient_parity_fast(geom, spec_name):
+    _grad_parity(geom, spec_name)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec_name", sorted(SPECS))
+@pytest.mark.parametrize("geom", FAST_GEOMS + SLOW_GEOMS, ids=lambda g: g[0])
+def test_gradient_parity_grid(geom, spec_name):
+    _grad_parity(geom, spec_name)
+
+
+def test_epilogue_zero_planes_not_skipped():
+    """k < s transposed parities have zero conv output but a LIVE epilogue
+    (BN shift / residual must land there too)."""
+    spec = SPECS["bn_res_act"]
+    kw = dict(stride=4, transposed=True, output_padding=1)
+    x, w, eops = _operands(spec, kw, (1, 4, 4, 2), (2, 2, 2, 3))
+    fused = conv2d(x, w, backend="pallas", epilogue=spec, **eops, **kw)
+    want = conv2d(x, w, backend="xla", epilogue=spec, **eops, **kw)
+    assert_allclose(np.asarray(fused), np.asarray(want), rtol=2e-5, atol=2e-5)
+    # the k=2, s=4 schedule leaves parities 1 and 2 with no live tap: their
+    # conv output is identically zero, but the fused output must still carry
+    # the epilogue there (residual + shift) — pin that it is not zero
+    z = conv2d(x, w, backend="pallas", **kw)
+    zero_plane = np.asarray(z)[:, 1::4, 1::4, :]
+    assert np.abs(zero_plane).max() == 0.0
+    assert np.abs(np.asarray(fused)[:, 1::4, 1::4, :]).max() > 0.0
+
+
+def test_bf16_fused_epilogue():
+    """bf16 in/out with the epilogue applied on the fp32 accumulator."""
+    spec = SPECS["bn_act"]
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 8, 4), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 8), jnp.bfloat16)
+    sc = jnp.ones((8,)); sh = jnp.zeros((8,)); al = jnp.full((1,), 0.25)
+    got = ops.conv2d(x, w, epilogue=spec, scale=sc, shift=sh, alpha=al)
+    z = ops.conv2d(x, w)
+    want = apply_reference(spec, z, (sc, sh, al))
+    assert got.dtype == jnp.bfloat16
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    rtol=3e-2, atol=3e-2)
+
+
+def test_per_channel_alpha():
+    """PReLU slope may be scalar or per-channel."""
+    spec = SPECS["prelu"]
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 8, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, 4, 6))
+    al = jnp.linspace(0.1, 0.9, 6)
+    got = ops.conv2d(x, w, epilogue=spec, alpha=al)
+    want = apply_reference(spec, ops.conv2d(x, w), (al,))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_pack_args_validation():
+    spec = EpilogueSpec(bn=True)
+    with pytest.raises(ValueError, match="requires operand"):
+        pack_args(spec, scale=jnp.ones((4,)))          # shift missing
+    with pytest.raises(ValueError, match="does not take"):
+        pack_args(spec, scale=jnp.ones((4,)), shift=jnp.zeros((4,)),
+                  alpha=jnp.ones((1,)))
+    with pytest.raises(ValueError, match="residual"):
+        EpilogueSpec(residual="sideways")
+
+
+def test_residual_shape_mismatch_raises():
+    spec = EpilogueSpec(residual="post_act")
+    x = jnp.zeros((1, 8, 8, 4))
+    w = jnp.zeros((3, 3, 4, 4))
+    with pytest.raises((ValueError, TypeError)):
+        jax.block_until_ready(ops.conv2d(
+            x, w, epilogue=spec, residual=jnp.zeros((1, 3, 3, 4))))
+
+
+# ------------------------------------------------- rectangular kernels ---
+
+@pytest.mark.parametrize("ks", [(5, 1), (1, 5), (3, 2)])
+def test_rectangular_dense_kernel(ks):
+    """ENet's asymmetric pair no longer falls back to lax under pallas."""
+    kh, kw = ks
+    x = jax.random.normal(jax.random.PRNGKey(kh), (1, 10, 11, 3))
+    w = jax.random.normal(jax.random.PRNGKey(kw), (kh, kw, 3, 5))
+    got = conv2d(x, w, backend="pallas")
+    want = conv2d(x, w, backend="xla")
+    assert got.shape == want.shape == (1, 10, 11, 5)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_rectangular_dense_gradients():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 9, 9, 2))
+    w = jax.random.normal(jax.random.PRNGKey(1), (5, 1, 2, 3))
+
+    def loss(backend):
+        return lambda x, w: jnp.sum(jnp.sin(conv2d(x, w, backend=backend)))
+
+    gx_x, gw_x = jax.grad(loss("xla"), (0, 1))(x, w)
+    gx_p, gw_p = jax.grad(loss("pallas"), (0, 1))(x, w)
+    assert_allclose(np.asarray(gx_p), np.asarray(gx_x), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(gw_p), np.asarray(gw_x), rtol=1e-4, atol=1e-4)
+
+
+def test_rectangular_fused_epilogue():
+    spec = SPECS["bn_act"]
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(1), (1, 5, 3, 4))
+    sc = jnp.ones((4,)) * 1.5; sh = jnp.full((4,), -0.2); al = jnp.full((1,), 0.1)
+    got = conv2d(x, w, backend="pallas", epilogue=spec, scale=sc, shift=sh,
+                 alpha=al)
+    want = conv2d(x, w, backend="xla", epilogue=spec, scale=sc, shift=sh,
+                  alpha=al)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)

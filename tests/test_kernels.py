@@ -49,6 +49,19 @@ def test_conv2d_kernel(case, dtype):
                     **_tol(dtype))
 
 
+@pytest.mark.parametrize("ks", [(5, 1), (1, 5), (2, 3), (4, 1)])
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv2d_kernel_rectangular(ks, stride):
+    """Rectangular kernels (ENet's 5x1/1x5 asymmetric pair) are first-class:
+    per-dim SAME pads, per-dim tap loops, per-dim halo."""
+    kh, kw = ks
+    x, wt = _pair(kh * 7 + kw, (1, 14, 11, 3), (kh, kw, 3, 5), jnp.float32)
+    got = ops.conv2d(x, wt, stride=stride, padding="SAME")
+    want = ref.conv2d_ref(x, wt, stride=stride, padding="SAME")
+    assert got.shape == want.shape
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
 # --------------------------------------------------------- dilated conv ---
 
 @pytest.mark.parametrize("dilation", [1, 2, 3, 4, 8])
