@@ -1,0 +1,93 @@
+"""Generate images with the DCGAN generator on the decomposition engine.
+
+Runs a (randomly initialised or checkpointed) DCGAN-style generator — a
+chain of k=4/s=2 transposed convolutions, the workload the paper's weight
+decomposition exists for — end-to-end, and prints the cycle-model
+naive-vs-decomposed table for the generative workloads (DCGAN 64/128,
+diffusion U-Net decoder).  Cross-backend parity (xla vs the fused pallas
+kernels, 1e-5 bar) is checked whenever it is tractable: always with
+``--smoke``/``--ngf 16``, and at any width on a compiled accelerator
+backend; full canonical width on CPU skips it (interpret-mode pallas).
+
+  PYTHONPATH=src python examples/generate_dcgan.py
+  PYTHONPATH=src python examples/generate_dcgan.py --size 128 --backend pallas
+  PYTHONPATH=src python examples/generate_dcgan.py --smoke   # CI: tiny ngf
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cycle_model as cm
+from repro.core.gen_spec import GEN_WORKLOADS
+from repro.models import dcgan
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", type=int, default=64, choices=(64, 128))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--nz", type=int, default=100)
+    ap.add_argument("--ngf", type=int, default=64,
+                    help="width multiplier (canonical DCGAN: 64)")
+    ap.add_argument("--backend", default="xla", choices=("xla", "pallas"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny widths + parity check only (CI)")
+    ns = ap.parse_args(argv)
+    if ns.smoke:
+        ns.ngf, ns.nz, ns.batch = 4, 16, 2
+
+    # pallas on CPU is interpret mode: tractable at demo widths, ~hours at
+    # the canonical ngf=64 — refuse the hang up front (also gates the
+    # cross-backend parity check below)
+    pallas_ok = ns.ngf <= 16 or jax.default_backend() != "cpu"
+    if ns.backend == "pallas" and not pallas_ok:
+        ap.error("backend=pallas at full width runs interpret mode on CPU "
+                 "(~hours); rerun with --smoke / --ngf 16, or on an "
+                 "accelerator backend")
+
+    key = jax.random.PRNGKey(ns.seed)
+    params = dcgan.init_params(key, size=ns.size, nz=ns.nz, ngf=ns.ngf)
+    z = jax.random.normal(jax.random.PRNGKey(ns.seed + 1), (ns.batch, ns.nz))
+
+    imgs = np.asarray(dcgan.forward(params, z, backend=ns.backend))
+    print(f"generated {imgs.shape} on backend={ns.backend} "
+          f"(range [{imgs.min():+.3f}, {imgs.max():+.3f}], tanh-bounded)")
+
+    # cross-backend parity: the fused parity-plane kernels against the XLA
+    # reference (the issue's acceptance bar is 1e-5 in fp32); gated by the
+    # same interpret-mode tractability check as above.
+    if pallas_ok:
+        other = "pallas" if ns.backend == "xla" else "xla"
+        dev = float(jnp.abs(dcgan.forward(params, z, backend=other)
+                            - jnp.asarray(imgs)).max())
+        print(f"max deviation vs backend={other}: {dev:.2e} (bar: 1e-5)")
+        assert dev <= 1e-5, dev
+    else:
+        print("skipping cross-backend parity at full width on CPU "
+              "(interpret-mode pallas; rerun with --smoke or --ngf 16)")
+
+    print("\n== cycle model: generative decoder workloads "
+          "(naive array schedule vs decomposed) ==")
+    hdr = f"{'workload':<10} {'naive Mcyc':>11} {'ours Mcyc':>10} " \
+          f"{'speedup':>8} {'cut %':>6} {'tconv %':>8}"
+    print(hdr + "\n" + "-" * len(hdr))
+    for name, fn in GEN_WORKLOADS.items():
+        rep = cm.report(fn())
+        print(f"{name:<10} {rep['naive_cycles'] / 1e6:>11.1f} "
+              f"{rep['our_cycles'] / 1e6:>10.1f} "
+              f"{rep['speedup_vs_naive']:>7.2f}x "
+              f"{rep['cycle_reduction_vs_naive_pct']:>6.1f} "
+              f"{rep['share_transposed_pct']:>8.1f}")
+    print("\n(EcoFlow's point, reproduced: the weight decomposition covers "
+          ">99% of a generator's\n cycles, vs ~5% of ENet's — the whole net "
+          "runs at the transposed-class speedup.)")
+
+
+if __name__ == "__main__":
+    main()

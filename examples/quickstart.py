@@ -49,3 +49,14 @@ rep = cm.report(enet_512_layers())
 print(f"ENet@512x512 on the modeled 168-MAC array: "
       f"{rep['cycle_reduction_pct']:.1f}% cycles removed, "
       f"{rep['overall_speedup']:.1f}x speedup (paper: 87.8%, 8.2x)")
+
+# --- where the weight decomposition matters most ---------------------------
+# generative decoders (DCGAN generators, diffusion U-Net decoder) are
+# transposed-conv-dominated — run examples/generate_dcgan.py for the
+# end-to-end demo and the naive-vs-decomposed cycle table
+from repro.core.gen_spec import dcgan_layers
+
+rg = cm.report(dcgan_layers(64))
+print(f"DCGAN@64x64 (examples/generate_dcgan.py): "
+      f"{rg['share_transposed_pct']:.0f}% transposed cycles, "
+      f"{rg['speedup_vs_naive']:.1f}x vs the naive array schedule")

@@ -49,18 +49,38 @@ def _dilated_eff_k(l: ConvLayer) -> int:
     return (l.D + 1) * (l.kh - 1) + 1
 
 
+def tconv_pads(l: ConvLayer) -> tuple[int, int]:
+    """Resolve a transposed layer's ``(p_lo, p_hi)`` zero-insert pads.
+
+    ``padding=None`` means the framework default ``(k-1)//2`` (every
+    ENet/ESPNet layer); generative decoders record explicit pads — DCGAN's
+    k=4/s=2 chains use ``p_lo=2`` with ``output_padding=0`` (the PyTorch
+    ``ConvTranspose2d(k=4, s=2, p=1)`` geometry), U-Net's k=2/s=2 upsample
+    ``p_lo=1`` — so the costing must not assume ``(k-1)//2``.
+
+    Square kernels only, like the executable engine (``decompose.conv2d``
+    rejects ``kh != kw`` transposed convs): a single ``p_lo`` cannot
+    describe a rectangular kernel's per-dimension pads.
+    """
+    if l.kh != l.kw:
+        raise ValueError(
+            f"transposed layers are square-kernel only, got {l.kh}x{l.kw}")
+    p_lo = (l.kh - 1) // 2 if l.padding is None else l.padding
+    return p_lo, p_lo + l.output_padding
+
+
 def tconv_input_size(l: ConvLayer) -> tuple[int, int]:
     """Invert the transposed output-size relation to the input extent.
 
-    ``oh = (h_in - 1)*s + p_lo + p_hi - k + 2`` with ``p_lo = (k-1)//2`` and
-    ``p_hi = p_lo + output_padding`` — the general (k, s) form; reduces to
-    ``h_out // s`` for the ENet case (k=3, s=2, output_padding=1).
+    ``oh = (h_in - 1)*s + p_lo + p_hi - k + 2`` with ``(p_lo, p_hi)`` from
+    :func:`tconv_pads` — the general (k, s, padding) form; reduces to
+    ``h_out // s`` for the ENet case (k=3, s=2, output_padding=1) and for
+    DCGAN's (k=4, s=2, p_lo=2, output_padding=0).
     """
     s = l.stride
+    p_lo, p_hi = tconv_pads(l)
 
     def inv(out: int, k: int) -> int:
-        p_lo = (k - 1) // 2
-        p_hi = p_lo + l.output_padding
         return (out - p_lo - p_hi + k - 2) // s + 1
 
     return inv(l.h_out, l.kh), inv(l.w_out, l.kw)
@@ -114,25 +134,27 @@ def ideal_sparse_macs(l: ConvLayer) -> int:
     if l.kind == "transposed":
         s = l.stride
         h_in, w_in = tconv_input_size(l)
+        p_lo, _ = tconv_pads(l)
         total = 0
-        p_r, p_c = (l.kh - 1) // 2, (l.kw - 1) // 2
         for ry in range(s):
-            taps_r = [t for t in range(l.kh) if (t - p_r + ry) % s == 0]
+            # parities with no live tap (possible when k < s) are identically
+            # zero conv planes: they contribute no MACs at all
+            taps_r = [t for t in range(l.kh) if (t - p_lo + ry) % s == 0]
             n_y = len(range(ry, l.h_out, s))
             live_r = sum(
                 1
                 for b in range(n_y)
                 for t in taps_r
-                if 0 <= b + (ry + t - p_r) // s < h_in
+                if 0 <= b + (ry + t - p_lo) // s < h_in
             )
             for rx in range(s):
-                taps_c = [t for t in range(l.kw) if (t - p_c + rx) % s == 0]
+                taps_c = [t for t in range(l.kw) if (t - p_lo + rx) % s == 0]
                 n_x = len(range(rx, l.w_out, s))
                 live_c = sum(
                     1
                     for b in range(n_x)
                     for t in taps_c
-                    if 0 <= b + (rx + t - p_c) // s < w_in
+                    if 0 <= b + (rx + t - p_lo) // s < w_in
                 )
                 total += live_r * live_c
         return total * l.cin * l.cout
@@ -227,6 +249,16 @@ def summarize(layers: list[ConvLayer]) -> dict[str, GroupStats]:
     return groups
 
 
+def _group_speedup(gs: GroupStats) -> float:
+    """Dense/ours cycle ratio of one layer group; 1.0 for an absent group.
+
+    Generative workloads are not full-mix: DCGAN has no dilated layers at
+    all, so the per-group ratios must not divide by an empty group's zero
+    cycle count.
+    """
+    return gs.cycles_dense / gs.cycles_ours if gs.cycles_ours else 1.0
+
+
 def report(layers: list[ConvLayer]) -> dict[str, float]:
     """The paper's headline numbers, computed from the model."""
     g = summarize(layers)
@@ -251,8 +283,8 @@ def report(layers: list[ConvLayer]) -> dict[str, float]:
         "ours_dilated_pct": 100.0 * g["dilated"].cycles_ours / tot.cycles_dense,
         "ours_transposed_pct": 100.0 * g["transposed"].cycles_ours / tot.cycles_dense,
         "ours_general_pct": 100.0 * g["general"].cycles_ours / tot.cycles_dense,
-        "dilated_speedup": g["dilated"].cycles_dense / g["dilated"].cycles_ours,
-        "transposed_speedup": g["transposed"].cycles_dense / g["transposed"].cycles_ours,
+        "dilated_speedup": _group_speedup(g["dilated"]),
+        "transposed_speedup": _group_speedup(g["transposed"]),
         # throughput (Table I): peak = 168 MACs * 2 ops * 500 MHz
         "peak_gops": MACS_PER_CYCLE * 2 * FREQ_HZ / 1e9,
         "effective_gops": (tot.macs_dense * 2) / (tot.cycles_ours / FREQ_HZ) / 1e9,

@@ -33,6 +33,11 @@ class ConvLayer:
     stride: int = 1      # upsampling factor (transposed) or output stride (dilated)
     group: str = "general"  # general | dilated | transposed (paper Fig. 10 split)
     output_padding: int = 1  # transposed only: extra high-side output size
+    # transposed only: low-side pad of the zero-inserted input (p_lo).  None
+    # means the framework default (k-1)//2 that every ENet/ESPNet layer uses;
+    # generative decoders record explicit pads (DCGAN k=4/s=2 upsampling is
+    # p_lo=2, U-Net k=2/s=2 is p_lo=1 — repro.core.gen_spec).
+    padding: int | None = None
 
 
 def _bottleneck_regular(prefix: str, hw: int, c: int, D: int = 0, asym: bool = False):

@@ -1,0 +1,109 @@
+"""Generative-decoder workload tables (DCGAN generators, diffusion U-Net
+decoder) for the cycle model.
+
+EcoFlow's observation — and the reason the paper's weight decomposition
+exists — is that transposed convolutions dominate *generative* networks:
+GAN generators and diffusion decoders are chains of stride-2 upsampling
+convolutions, where ENet/ESPNet only carry a short decoder tail.  These
+tables mirror :mod:`repro.models.dcgan` and :mod:`repro.models.unet_decoder`
+the same way :mod:`repro.core.enet_spec` mirrors :mod:`repro.models.enet`:
+each entry records the convolution workload the accelerator executes.
+
+Geometry notes that matter to the cycle model:
+
+* DCGAN upsampling is ``k=4, s=2, p_lo=2, output_padding=0`` — the PyTorch
+  ``ConvTranspose2d(4, stride=2, padding=1)`` exact-2x geometry.  The pads
+  are *not* the framework default ``(k-1)//2``, so every entry records its
+  ``padding`` explicitly (``cycle_model.tconv_pads``).
+* The U-Net decoder alternates ``k=4`` and ``k=2`` upsampling (both with
+  ``p_lo = k//2``) — the even-kernel parity schedules, which the ENet-family
+  workloads never exercise.
+* DCGAN's initial projection (z -> 4x4xC) is a dense matmul; it is recorded
+  as the 1x1-conv-equivalent workload (one ``nz``-deep MAC per output
+  pixel), which issues exactly the same MAC count.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.enet_spec import ConvLayer
+
+#: per-level upsampling kernels of the U-Net decoder (k=2 and k=4 both get
+#: exercised); ``p_lo = k//2`` with output_padding=0 is the exact-2x geometry
+#: for even kernels.
+UNET_UP_KERNELS = (4, 2, 4)
+
+#: default U-Net decoder widths: level i runs at ``8 * 2**i`` spatial with
+#: this many channels (the skip concat doubles the input of the first conv).
+UNET_WIDTHS = (256, 128, 64)
+
+
+def dcgan_layers(size: int = 64, nz: int = 100, ngf: int = 64,
+                 out_ch: int = 3) -> list[ConvLayer]:
+    """DCGAN-style generator at 64x64 or 128x128 (Radford et al. 2016).
+
+    Projection to ``4x4 x (ngf * size/8)``, then chained ``k=4, s=2``
+    transposed convolutions halving channels and doubling resolution each
+    stage, and a ``k=4, s=2`` tanh head to ``out_ch`` — all transposed
+    workload except the projection.  Mirrors
+    :func:`repro.models.dcgan.init_params` exactly.
+    """
+    if size not in (64, 128):
+        raise ValueError(f"DCGAN generator sizes are 64/128, got {size}")
+    n_up = int(math.log2(size // 4))        # 4 stages at 64, 5 at 128
+    c = ngf * (size // 8)                   # 512 at 64, 1024 at 128
+    L = [ConvLayer("proj", "conv", 4, 4, nz, c, 1, 1)]
+    hw = 4
+    for i in range(1, n_up):
+        hw *= 2
+        L.append(ConvLayer(f"up{i}", "transposed", hw, hw, c, c // 2, 4, 4,
+                           stride=2, group="transposed", output_padding=0,
+                           padding=2))
+        c //= 2
+    L.append(ConvLayer("head", "transposed", hw * 2, hw * 2, c, out_ch, 4, 4,
+                       stride=2, group="transposed", output_padding=0,
+                       padding=2))
+    return L
+
+
+def unet_decoder_layers(widths: tuple[int, ...] = UNET_WIDTHS,
+                        skip_chs: tuple[int, ...] | None = None,
+                        hw: int = 8, out_ch: int = 3) -> list[ConvLayer]:
+    """Diffusion-style U-Net decoder block stack (mid 8x8 -> 64x64 image).
+
+    Level ``i`` runs at ``hw * 2**i`` spatial with ``widths[i]`` channels:
+    skip-concat (``+ skip_chs[i]``) -> two dense 3x3 convs (GroupNorm-folded
+    epilogues) -> ``k in {4, 2}``, s=2 transposed upsample to the next
+    level's width (the last level halves).  A dense 3x3 head maps to
+    ``out_ch``.  Mirrors :func:`repro.models.unet_decoder.init_params`.
+    """
+    if skip_chs is None:
+        skip_chs = tuple(widths)
+    if len(skip_chs) != len(widths):
+        raise ValueError(f"{len(skip_chs)} skip widths for {len(widths)} levels")
+    L: list[ConvLayer] = []
+    for i, (c, cs) in enumerate(zip(widths, skip_chs)):
+        k = UNET_UP_KERNELS[i % len(UNET_UP_KERNELS)]
+        c_next = widths[i + 1] if i + 1 < len(widths) else widths[-1] // 2
+        L.append(ConvLayer(f"lvl{i}.conv1", "conv", hw, hw, c + cs, c, 3, 3))
+        L.append(ConvLayer(f"lvl{i}.conv2", "conv", hw, hw, c, c, 3, 3))
+        hw *= 2
+        L.append(ConvLayer(f"lvl{i}.up_k{k}", "transposed", hw, hw, c, c_next,
+                           k, k, stride=2, group="transposed",
+                           output_padding=0, padding=k // 2))
+    L.append(ConvLayer("head", "conv", hw, hw, widths[-1] // 2, out_ch, 3, 3))
+    return L
+
+
+#: name -> zero-arg table constructor; the benchmark/report surfaces iterate
+#: this so a new generative workload is one entry here.
+GEN_WORKLOADS = {
+    "dcgan64": lambda: dcgan_layers(64),
+    "dcgan128": lambda: dcgan_layers(128),
+    "unet_dec": lambda: unet_decoder_layers(),
+}
+
+
+__all__ = ["dcgan_layers", "unet_decoder_layers", "GEN_WORKLOADS",
+           "UNET_UP_KERNELS", "UNET_WIDTHS"]

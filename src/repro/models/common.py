@@ -26,6 +26,22 @@ def conv_init(key, kh: int, kw: int, cin: int, cout: int, dtype=jnp.float32):
             * (2.0 / fan_in) ** 0.5).astype(dtype)
 
 
+def tconv_init(key, kh: int, kw: int, cin: int, cout: int, stride: int = 2,
+               dtype=jnp.float32):
+    """He-normal init for a transposed conv's HWIO kernel.
+
+    A stride-``s`` transposed conv spreads its ``k*k`` taps over ``s*s``
+    output parities, so each output pixel accumulates only ``~k*k/s**2``
+    taps — that is the effective fan-in (exactly the parity sub-kernel sizes
+    of the weight decomposition, DESIGN.md §3).  Using the dense-conv fan-in
+    would shrink activations by ``s`` per upsampling stage, which a deep
+    generator chain (DCGAN stacks 4-5 of them) turns into vanishing scale.
+    """
+    fan_in = max(kh * kw * cin // (stride * stride), 1)
+    return (jax.random.normal(key, (kh, kw, cin, cout), jnp.float32)
+            * (2.0 / fan_in) ** 0.5).astype(dtype)
+
+
 def prelu(a, x):
     return jnp.where(x >= 0, x, a * x)
 
@@ -60,4 +76,42 @@ def fold_bn(p: dict, mu: jax.Array | None = None,
     return scale, b - mu * scale
 
 
-__all__ = ["conv_init", "prelu", "bn_init", "bn", "fold_bn"]
+def gn_init(c: int, dtype=jnp.float32) -> dict:
+    """GroupNorm parameters: per-channel affine (diffusion U-Net blocks)."""
+    return {"g": jnp.ones((c,), dtype), "b": jnp.zeros((c,), dtype)}
+
+
+def group_norm(p: dict, x: jax.Array, groups: int = 8,
+               eps: float = 1e-5) -> jax.Array:
+    """GroupNorm with live statistics (reference only, like :func:`bn`).
+
+    Statistics are per-sample per-group — a function of the very activation
+    being produced — so, exactly like batch-statistics BN, they cannot fuse
+    into a single conv output pass.  The model zoo carries GroupNorm in
+    *folded* form instead (:func:`fold_gn`); this op is the oracle the fold
+    is tested against.
+    """
+    n, h, w, c = x.shape
+    if c % groups:
+        raise ValueError(f"channels {c} not divisible by groups {groups}")
+    xg = x.reshape(n, h, w, groups, c // groups)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * p["g"] + p["b"]
+
+
+def fold_gn(p: dict) -> tuple[jax.Array, jax.Array]:
+    """Fold GroupNorm to the ``(scale, shift)`` the fused epilogues consume.
+
+    Mirrors :func:`fold_bn` with identity statistics: the learnable affine
+    ``y = x * g + b`` rides the conv kernel's BN epilogue slots (DESIGN.md
+    §8).  Unlike BN there is no running-statistics variant to fold at
+    inference — GroupNorm statistics are per-sample, so a live-stats fold
+    would need a per-sample scale the (cout,)-vector epilogue cannot carry.
+    """
+    return p["g"], p["b"]
+
+
+__all__ = ["conv_init", "tconv_init", "prelu", "bn_init", "bn", "fold_bn",
+           "gn_init", "group_norm", "fold_gn"]

@@ -1,0 +1,99 @@
+"""DCGAN-style generator built on the paper's weight decomposition.
+
+The generator (Radford et al. 2016) is the canonical transposed-conv-heavy
+workload: a latent projection to ``4x4 x C`` followed by a chain of ``k=4,
+s=2`` transposed convolutions that double resolution and halve channels each
+stage, closed by a tanh head — >99% of its MACs are transposed convolution,
+against ENet's ~7% decoder tail.  Every upsampling stage runs through the
+weight decomposition (:mod:`repro.core.transposed` on xla, the fused parity
+kernel of :mod:`repro.kernels.transposed_conv` on pallas), so this model is
+the stress workload for the even-kernel (k=4) parity schedules and the
+``p_lo=2`` (non-default) padding geometry — the PyTorch
+``ConvTranspose2d(4, stride=2, padding=1)`` exact-2x form.
+
+BN/ReLU after each stage is emitted as a fused epilogue spec (DESIGN.md §7):
+BN in folded scale/shift form (``common.fold_bn``), ReLU as PReLU with a
+fixed zero slope.  The projection is a dense matmul (not a conv) so its
+BN/ReLU runs as the same epilogue oracle in one pass.
+
+Layer inventory matches :func:`repro.core.gen_spec.dcgan_layers` (the
+cycle-model workload table).  Differentiable on both backends via the
+engine's custom VJPs (DESIGN.md §6); see ``examples/generate_dcgan.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decompose import conv2d
+from repro.kernels.epilogue import EpilogueSpec, apply_reference
+from repro.models.common import bn_init as _bn_init
+from repro.models.common import fold_bn as _fold_bn
+from repro.models.common import tconv_init as _tconv_init
+
+_EP_BN_ACT = EpilogueSpec(bn=True, prelu=True)
+#: PReLU slope 0 == ReLU (the DCGAN generator's activation); a traced
+#: constant, not a parameter — the slope is not learnable.
+_RELU_SLOPE = (0.0,)
+
+
+def n_stages(size: int) -> int:
+    """Number of stride-2 stages (incl. head) from 4x4 to ``size``."""
+    if size not in (64, 128):
+        raise ValueError(f"DCGAN generator sizes are 64/128, got {size}")
+    return int(math.log2(size // 4))
+
+
+def init_params(key, size: int = 64, nz: int = 100, ngf: int = 64,
+                out_ch: int = 3, dtype=jnp.float32) -> dict:
+    """Generator parameters for a ``size x size`` output (64 or 128).
+
+    ``ngf`` scales every width (the canonical net is ngf=64: 512 channels at
+    4x4 for the 64x64 generator, 1024 for 128x128); tests shrink it.
+    """
+    n_up = n_stages(size)
+    c = ngf * (size // 8)
+    ks = jax.random.split(key, n_up + 1)
+    p = {
+        # fan-in-normal projection: z (nz) -> 4*4*c, reshaped to (4, 4, c)
+        "proj": (jax.random.normal(ks[0], (nz, 4 * 4 * c), jnp.float32)
+                 * (2.0 / nz) ** 0.5).astype(dtype),
+        "proj_bn": _bn_init(c, dtype),
+    }
+    for i in range(1, n_up):
+        p[f"up{i}"] = _tconv_init(ks[i], 4, 4, c, c // 2, stride=2,
+                                  dtype=dtype)
+        p[f"bn{i}"] = _bn_init(c // 2, dtype)
+        c //= 2
+    p["head"] = _tconv_init(ks[n_up], 4, 4, c, out_ch, stride=2, dtype=dtype)
+    return p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("decomposed", "backend", "interpret"))
+def forward(params: dict, z: jax.Array, decomposed: bool = True,
+            backend: str = "xla", interpret: bool | None = None) -> jax.Array:
+    """z: (N, nz) latents -> (N, size, size, out_ch) images in (-1, 1).
+
+    Every stage is ``k=4, s=2, p_lo=2, output_padding=0`` (exact 2x); the
+    BN/ReLU epilogue is fused into the transposed kernel's output pass.
+    ``decomposed=False`` is the measured zero-laden baseline (xla only).
+    """
+    n_up = 1 + sum(1 for k in params if k.startswith("up"))
+    alpha = jnp.asarray(_RELU_SLOPE, jnp.float32)
+    # latent projection: a matmul, recorded as the 1x1-conv-equivalent
+    # workload in gen_spec; its BN/ReLU runs as the epilogue oracle
+    h = (z @ params["proj"]).reshape(z.shape[0], 4, 4, -1)
+    sc, sh = _fold_bn(params["proj_bn"])
+    h = apply_reference(_EP_BN_ACT, h, (sc, sh, alpha))
+    kw = dict(stride=2, transposed=True, padding=2, output_padding=0,
+              decomposed=decomposed, backend=backend, interpret=interpret)
+    for i in range(1, n_up):
+        sc, sh = _fold_bn(params[f"bn{i}"])
+        h = conv2d(h, params[f"up{i}"], epilogue=_EP_BN_ACT, scale=sc,
+                   shift=sh, alpha=alpha, **kw)
+    return jnp.tanh(conv2d(h, params["head"], **kw))

@@ -1,0 +1,98 @@
+"""Diffusion-style U-Net decoder block stack on the decomposition engine.
+
+The decoder half of a diffusion U-Net (Ho et al. 2020 / Ronneberger et al.
+2015 lineage) is the second generative transposed-conv workload: each level
+concatenates an encoder skip, runs dense 3x3 convs, and upsamples with a
+stride-2 transposed convolution.  This stack alternates ``k=4`` and ``k=2``
+upsampling (both even-kernel parity schedules with ``p_lo = k//2``,
+``output_padding=0`` — exact 2x), so together with DCGAN it covers the
+even-(k, s) geometries the segmentation nets never touch.
+
+GroupNorm is carried in *folded* form (``common.fold_gn``, DESIGN.md §8):
+its learnable per-channel affine rides the conv kernels' BN epilogue slots,
+while live per-sample statistics — which cannot fuse into a single output
+pass — stay available as the :func:`repro.models.common.group_norm` oracle.
+The activation is PReLU (the engine's fused-epilogue vocabulary; slope 0.2
+approximates the SiLU-family smooth gates diffusion nets use).  The
+upsampling kernels fuse the PReLU alone.
+
+Layer inventory matches :func:`repro.core.gen_spec.unet_decoder_layers`.
+Differentiable on both backends (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decompose import conv2d
+from repro.core.gen_spec import UNET_UP_KERNELS, UNET_WIDTHS
+from repro.kernels.epilogue import EpilogueSpec
+from repro.models.common import conv_init as _conv_init
+from repro.models.common import fold_gn as _fold_gn
+from repro.models.common import gn_init as _gn_init
+from repro.models.common import tconv_init as _tconv_init
+
+_EP_GN_ACT = EpilogueSpec(bn=True, prelu=True)   # folded-GN affine + PReLU
+_EP_ACT = EpilogueSpec(prelu=True)
+
+
+def init_params(key, widths: tuple[int, ...] = UNET_WIDTHS,
+                skip_chs: tuple[int, ...] | None = None, out_ch: int = 3,
+                dtype=jnp.float32) -> dict:
+    """Decoder parameters; level ``i`` consumes a ``skip_chs[i]``-wide skip.
+
+    ``widths`` are the per-level channel counts (the canonical stack is
+    (256, 128, 64) from an 8x8 mid-block); tests shrink them.
+    """
+    skip_chs = tuple(widths) if skip_chs is None else tuple(skip_chs)
+    if len(skip_chs) != len(widths):
+        raise ValueError(f"{len(skip_chs)} skip widths for {len(widths)} levels")
+    ks = iter(jax.random.split(key, 3 * len(widths) + 1))
+    p: dict = {}
+    for i, (c, cs) in enumerate(zip(widths, skip_chs)):
+        k = UNET_UP_KERNELS[i % len(UNET_UP_KERNELS)]
+        c_next = widths[i + 1] if i + 1 < len(widths) else widths[-1] // 2
+        p[f"l{i}_conv1"] = _conv_init(next(ks), 3, 3, c + cs, c, dtype)
+        p[f"l{i}_gn1"] = _gn_init(c, dtype)
+        p[f"l{i}_a1"] = jnp.full((1,), 0.2, dtype)
+        p[f"l{i}_conv2"] = _conv_init(next(ks), 3, 3, c, c, dtype)
+        p[f"l{i}_gn2"] = _gn_init(c, dtype)
+        p[f"l{i}_a2"] = jnp.full((1,), 0.2, dtype)
+        p[f"l{i}_up"] = _tconv_init(next(ks), k, k, c, c_next, stride=2,
+                                    dtype=dtype)
+        p[f"l{i}_aup"] = jnp.full((1,), 0.2, dtype)
+    p["head"] = _conv_init(next(ks), 3, 3, widths[-1] // 2, out_ch, dtype)
+    return p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("decomposed", "backend", "interpret"))
+def forward(params: dict, x: jax.Array, skips: tuple[jax.Array, ...],
+            decomposed: bool = True, backend: str = "xla",
+            interpret: bool | None = None) -> jax.Array:
+    """x: (N, H, W, widths[0]) mid features; skips[i] at level i's extent.
+
+    Per level: skip-concat -> 3x3 conv (folded-GN + PReLU epilogue) -> 3x3
+    conv (same) -> even-k stride-2 transposed upsample (PReLU epilogue).
+    Returns (N, H * 2**levels, W * 2**levels, out_ch).
+    """
+    levels = sum(1 for k in params if k.endswith("_up"))
+    if len(skips) != levels:
+        raise ValueError(f"{len(skips)} skips for {levels} levels")
+    h = x
+    for i in range(levels):
+        k = UNET_UP_KERNELS[i % len(UNET_UP_KERNELS)]
+        h = jnp.concatenate([h, skips[i]], axis=-1)
+        for j in (1, 2):
+            sc, sh = _fold_gn(params[f"l{i}_gn{j}"])
+            h = conv2d(h, params[f"l{i}_conv{j}"], backend=backend,
+                       interpret=interpret, epilogue=_EP_GN_ACT, scale=sc,
+                       shift=sh, alpha=params[f"l{i}_a{j}"])
+        h = conv2d(h, params[f"l{i}_up"], stride=2, transposed=True,
+                   padding=k // 2, output_padding=0, decomposed=decomposed,
+                   backend=backend, interpret=interpret, epilogue=_EP_ACT,
+                   alpha=params[f"l{i}_aup"])
+    return conv2d(h, params["head"], backend=backend, interpret=interpret)

@@ -134,3 +134,88 @@ def test_cycles_scale_linearly_with_channels():
     b = ConvLayer("b", "dilated", 64, 64, 32, 32, 3, 3, D=3, group="dilated")
     ca, cb = cm.cycles_our_decomposed(a), cm.cycles_our_decomposed(b)
     assert cb == pytest.approx(4 * ca, rel=0.01)
+
+
+# ------------------------------------- explicit-padding transposed costing ---
+# Regression: tconv_input_size/ideal_sparse_macs used to hard-code the
+# framework-default p_lo=(k-1)//2, which mis-inverts the input extent for the
+# generative geometries (DCGAN k=4/s=2/p_lo=2/op=0, U-Net k=2/s=2/p_lo=1).
+
+def _tlayer(h_out, k, s, padding, op, cin=16, cout=8):
+    from repro.core.enet_spec import ConvLayer
+
+    return ConvLayer("t", "transposed", h_out, h_out, cin, cout, k, k,
+                     stride=s, group="transposed", output_padding=op,
+                     padding=padding)
+
+
+@pytest.mark.parametrize("h_out,k,s,padding,op,h_in", [
+    (8, 4, 2, 2, 0, 4),      # DCGAN exact-2x stage
+    (16, 2, 2, 1, 0, 8),     # U-Net k=2 exact-2x upsample
+    (128, 3, 2, None, 1, 64),  # ENet default geometry unchanged
+    (8, 5, 3, 2, 1, 3),      # odd general case
+])
+def test_tconv_input_size_honors_padding(h_out, k, s, padding, op, h_in):
+    l = _tlayer(h_out, k, s, padding, op)
+    assert cm.tconv_input_size(l) == (h_in, h_in)
+    # round-trip through the executable engine's size relation
+    from repro.core import transposed as tr
+
+    p_lo, p_hi = cm.tconv_pads(l)
+    assert tr.out_size(h_in, s, k, p_lo, p_hi) == h_out
+
+
+def test_tconv_sparse_macs_bounded_by_decomposition():
+    """ideal sparse (in-bounds live taps) <= MACs the decomposition issues
+    (which include boundary taps over pad) <= dense-over-zero-inserted."""
+    from repro.core import transposed as tr
+
+    for l in (_tlayer(8, 4, 2, 2, 0), _tlayer(16, 2, 2, 1, 0),
+              _tlayer(11, 2, 3, 1, 0), _tlayer(128, 3, 2, None, 1)):
+        h_in, w_in = cm.tconv_input_size(l)
+        p_lo, p_hi = cm.tconv_pads(l)
+        issued = tr.macs_decomposed_transposed(h_in, w_in, l.cin, l.cout,
+                                               l.kh, l.stride, p_lo, p_hi)
+        assert cm.ideal_sparse_macs(l) <= issued <= cm.ideal_dense_macs(l)
+
+
+def test_k_lt_s_zero_planes_cost_nothing():
+    """k < s leaves dead output parities (zero conv planes): the sparse MAC
+    count must skip them entirely, and the decomposed schedule still packs
+    only the k*k live taps (every tap maps to exactly one parity)."""
+    l = _tlayer(11, 2, 3, 1, 0)
+    h_in, _ = cm.tconv_input_size(l)
+    # one of the 3 parities has no live tap per dim: the 3 dead rows/cols of
+    # the 11-wide output contribute no MACs, so the sparse count collapses to
+    # the k*k in-bounds taps over the INPUT extent — nothing charged to the
+    # zero conv planes
+    assert cm.ideal_sparse_macs(l) == l.kh * l.kw * h_in * h_in * l.cin * l.cout
+    # while the naive schedule pays k*k taps for every one of the 11x11
+    # outputs, dead planes included
+    naive = l.kh * l.kw * l.h_out * l.w_out * l.cin * l.cout
+    assert cm.ideal_sparse_macs(l) < naive / (l.stride ** 2 / 2)
+    # port packing charges exactly k*k taps x cin x cout per input column
+    expected = (cm._ceil(h_in, cm.N_ROWS) * h_in
+                * cm._ceil(l.kh * l.kw * l.cin * l.cout, 3 * cm.N_BLOCKS))
+    assert cm.cycles_our_decomposed(l) == expected
+
+
+def test_adjoint_layer_uses_padded_input_extent():
+    """The adjoint of a DCGAN upsample is a strided dense conv at the TRUE
+    input extent (4 for an 8-out stage), not the (k-1)//2 mis-inversion."""
+    l = _tlayer(8, 4, 2, 2, 0)
+    a = cm.adjoint_layer(l)
+    assert a.kind == "conv"
+    assert (a.h_out, a.w_out) == (4, 4)
+    assert (a.cin, a.cout) == (l.cout, l.cin)
+
+
+def test_report_handles_missing_groups():
+    """Generative workloads are not full-mix: a dilated-free layer set must
+    not divide by the empty group's zero cycles."""
+    from repro.core.gen_spec import dcgan_layers
+
+    rep = cm.report(dcgan_layers(64))
+    assert rep["dilated_speedup"] == 1.0          # absent group: neutral
+    assert rep["share_dilated_pct"] == 0.0
+    assert rep["transposed_speedup"] > 2.0

@@ -24,6 +24,14 @@ from repro.core.enet_spec import (
     dilated_layer_sets, enet_512_layers, transposed_layer_sets,
 )
 from repro.core.espnet_spec import espnet_512_layers
+from repro.core.gen_spec import dcgan_layers, unet_decoder_layers
+
+# the benchmarks package lives at the repo root (pytest's pythonpath only
+# covers src/); one module-level insert serves every benchmark-harness test
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
 PAPER_SPEEDUP = 8.2
 PAPER_REDUCTION_PCT = 87.8
@@ -144,6 +152,110 @@ def test_espnet_dilated_bands(espnet):
     assert effs[1] > effs[3] > effs[7]
 
 
+# ------------------------------------------- generative decoder workloads ---
+#
+# EcoFlow's argument, pinned: the weight decomposition matters most where
+# transposed convolutions dominate — GAN generators and diffusion decoders,
+# not segmentation decoder tails.  Bands computed from the gen_spec tables
+# (mirroring the fig11 pattern: cycle bands + an executable MAC-skip
+# cross-check from each layer set's own geometry).
+
+@pytest.fixture(scope="module")
+def dcgan64():
+    return dcgan_layers(64)
+
+
+@pytest.fixture(scope="module")
+def dcgan128():
+    return dcgan_layers(128)
+
+
+@pytest.fixture(scope="module")
+def unet_dec():
+    return unet_decoder_layers()
+
+
+def _tconv_mac_skip(layers):
+    """naive/decomposed MAC ratio from each layer's own geometry — the SAME
+    helper the fig12 benchmark emits, so the golden pin and the benchmark
+    row cannot drift apart."""
+    from benchmarks.fig12_transposed_layers import _tconv_mac_skip as skip
+
+    return skip(layers)
+
+
+def test_dcgan_is_transposed_dominated(dcgan64, dcgan128, enet):
+    """>99% of generator cycles are transposed conv — the whole net runs on
+    the weight decomposition, vs ENet's ~5% decoder tail."""
+    for layers in (dcgan64, dcgan128):
+        rep = cm.report(layers)
+        assert rep["share_transposed_pct"] >= 99.0
+        assert rep["share_dilated_pct"] == 0.0
+    assert cm.report(enet)["share_transposed_pct"] <= 10.0
+
+
+def test_dcgan_reduction_bands(dcgan64, dcgan128):
+    """Pinned bands: the k=4/s=2 chains cut ~72% of the naive-array cycles
+    (s**2 = 4x MAC skip, minus the input-tiling and boundary losses that
+    dominate at the 4x4/8x8 ends of the chain)."""
+    for layers, lo_sp in ((dcgan64, 3.4), (dcgan128, 3.4)):
+        rep = cm.report(layers)
+        assert lo_sp <= rep["speedup_vs_naive"] <= 3.9, rep
+        assert 70.0 <= rep["cycle_reduction_vs_naive_pct"] <= 75.0, rep
+        assert 2.3 <= rep["transposed_speedup"] <= 2.9, rep
+
+
+def test_dcgan_mac_skip_is_exactly_s_squared(dcgan64, dcgan128, unet_dec):
+    """Exact-2x even-kernel geometry gives every parity (k/s)**2 live taps,
+    so the executable MAC skip is exactly s**2 = 4 for all three workloads —
+    the cross-check that the spec tables record the true geometry."""
+    for layers in (dcgan64, dcgan128, unet_dec):
+        assert _tconv_mac_skip(layers) == pytest.approx(4.0, rel=1e-9)
+
+
+def test_dcgan_boundary_loss_shrinks_with_size(dcgan64, dcgan128):
+    """Transposed efficiency vs ideal sparse improves with extent (the
+    Fig. 12 trend, sampled at generative 4..128 extents where the boundary
+    taps of p_lo=2 actually bite)."""
+
+    def eff(layers):
+        g = cm.summarize(layers)
+        return g["transposed"].cycles_sparse / g["transposed"].cycles_ours
+
+    assert 0.50 <= eff(dcgan64) <= 0.60
+    assert 0.55 <= eff(dcgan128) <= 0.66
+    assert eff(dcgan64) < eff(dcgan128)
+
+
+def test_unet_decoder_bands(unet_dec):
+    """The mixed conv/tconv decoder: transposed is ~half the cycle share and
+    the decomposition still removes ~30% of the naive-array cycles."""
+    rep = cm.report(unet_dec)
+    assert 40.0 <= rep["share_transposed_pct"] <= 55.0
+    assert 1.3 <= rep["speedup_vs_naive"] <= 1.6
+    assert 26.0 <= rep["cycle_reduction_vs_naive_pct"] <= 34.0
+    assert 2.6 <= rep["transposed_speedup"] <= 3.0
+
+
+def test_generative_training_report(dcgan64, unet_dec):
+    """The fwd+bwd extension holds for the generative workloads too: the
+    adjoint of a k=4/s=2 upsample is a strided dense conv at the input
+    extent, so training keeps a transposed-class win."""
+    for layers in (dcgan64, unet_dec):
+        t = cm.training_report(layers)
+        assert t["train_speedup_vs_naive"] >= 1.2
+        assert t["train_cycles"] > t["fwd_cycles"] > 0
+
+
+def test_ecoflow_share_ordering(dcgan64, unet_dec, enet, espnet):
+    """The weight decomposition's leverage orders exactly as EcoFlow argues:
+    generator >> diffusion decoder >> segmentation nets."""
+    share = {id(l): cm.report(l)["share_transposed_pct"]
+             for l in (dcgan64, unet_dec, enet, espnet)}
+    assert share[id(dcgan64)] > share[id(unet_dec)] > share[id(enet)]
+    assert share[id(dcgan64)] > share[id(unet_dec)] > share[id(espnet)]
+
+
 # --------------------------------------------- training-cost extension ---
 
 def test_training_speedup_carries_to_backward(enet, espnet):
@@ -174,10 +286,6 @@ def test_adjoint_layer_classes(enet):
 
 def test_fig10_and_fig11_benchmarks_run():
     """The figure benchmarks stay executable and emit the golden rows."""
-    import pathlib
-    import sys
-
-    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
     from benchmarks import fig10_enet_speedup, fig11_dilated_layers
 
     rows10 = {name: val for name, _, val in fig10_enet_speedup.run(csv=True)}
@@ -186,3 +294,16 @@ def test_fig10_and_fig11_benchmarks_run():
     rows11 = [name for name, _, _ in fig11_dilated_layers.run(csv=True)]
     assert any(n.startswith("fig11.enet.D15") for n in rows11)
     assert any(n.startswith("fig11.espnet.D7") for n in rows11)
+
+
+def test_fig12_benchmark_emits_generative_rows():
+    """fig12 carries the generative workload rows (they ride into the
+    BENCH_<rev>.json artifact through benchmarks/run.py)."""
+    from benchmarks import fig12_transposed_layers
+
+    rows = {name: val for name, _, val in fig12_transposed_layers.run(csv=True)}
+    for wl in ("dcgan64", "dcgan128", "unet_dec"):
+        assert f"fig12.{wl}.speedup_vs_naive_x" in rows
+        assert float(rows[f"fig12.{wl}.mac_skip_ratio"]) == pytest.approx(4.0)
+    assert float(rows["fig12.dcgan64.share_transposed_pct"]) >= 99.0
+    assert float(rows["fig12.L512.eff_vs_sparse_pct"]) >= 97.0  # paper band

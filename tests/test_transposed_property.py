@@ -1,0 +1,164 @@
+"""Property-based transposed-convolution grid: seeded random geometries.
+
+The generative-decoder workloads (DCGAN k=4/s=2/p_lo=2 chains, U-Net k=2
+upsampling — ``repro.core.gen_spec``) pushed the transposed engine into
+even-kernel, non-default-padding territory the ENet-era tests never sampled.
+This harness draws seeded random geometries over
+
+    k in 2..5  x  s in 2..4  x  p_lo in 0..k-1  x  output_padding in 0..s-1
+    x odd/even H, W  x  cin/cout NOT multiples of 8/128
+
+and asserts the three-way equivalence ``pallas == xla-decomposed ==
+lax.conv_transpose`` (the framework oracle) for forward and gradients.  A
+fast subset runs in tier-1; the full grid is marked ``slow``.
+
+The draws are seeded (``_RNG_SEED``) so failures reproduce exactly; bump the
+seed only together with the pinned case count.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+from numpy.testing import assert_allclose
+
+from repro.core import transposed as tr
+from repro.core.decompose import conv2d
+
+_RNG_SEED = 20240731
+_N_FAST = 8        # tier-1 forward cases
+_N_FULL = 40       # additional slow-grid cases
+_DIMS = ("NHWC", "HWIO", "NHWC")
+
+# channel counts deliberately not multiples of the fp32 tile lanes (8 / 128):
+# the kernels must mask, not assume aligned extents
+_CHANNELS = (1, 2, 3, 5, 6, 7, 9, 11, 13)
+
+
+def _draw_cases(n: int, seed: int = _RNG_SEED) -> list[tuple]:
+    """Seeded random geometry draws; rejects degenerate output extents."""
+    rng = np.random.default_rng(seed)
+    cases = []
+    while len(cases) < n:
+        k = int(rng.integers(2, 6))
+        s = int(rng.integers(2, 5))
+        p_lo = int(rng.integers(0, k))
+        op = int(rng.integers(0, s))
+        h = int(rng.integers(2, 14))
+        w = int(rng.integers(2, 14))
+        cin = int(rng.choice(_CHANNELS))
+        cout = int(rng.choice(_CHANNELS))
+        oh = tr.out_size(h, s, k, p_lo, p_lo + op)
+        ow = tr.out_size(w, s, k, p_lo, p_lo + op)
+        if oh <= 0 or ow <= 0:
+            continue
+        cases.append((h, w, cin, cout, k, s, p_lo, op))
+    return cases
+
+
+_FAST = _draw_cases(_N_FAST)
+_FULL = _draw_cases(_N_FAST + _N_FULL)[_N_FAST:]
+
+
+def _operands(case):
+    h, w, cin, cout, k, s, p_lo, op = case
+    k1, k2 = jax.random.split(jax.random.PRNGKey(hash(case) & 0x7FFFFFFF))
+    x = jax.random.normal(k1, (2, h, w, cin), jnp.float32)
+    wgt = jax.random.normal(k2, (k, k, cin, cout), jnp.float32)
+    return x, wgt
+
+
+def _lax_oracle(x, wgt, s, p_lo, op):
+    """The framework oracle: ``lax.conv_transpose`` with explicit pads.
+
+    With an explicit padding list, ``conv_transpose`` is the lhs-dilated
+    correlation at exactly our ``(p_lo, p_hi)`` convention (verified here so
+    the repo's semantics can never drift from the framework's).
+    """
+    return lax.conv_transpose(
+        x, wgt, (s, s), [(p_lo, p_lo + op), (p_lo, p_lo + op)],
+        dimension_numbers=_DIMS, transpose_kernel=False)
+
+
+def _check_forward(case):
+    h, w, cin, cout, k, s, p_lo, op = case
+    x, wgt = _operands(case)
+    oracle = _lax_oracle(x, wgt, s, p_lo, op)
+    dec = tr.transposed_conv2d_decomposed(x, wgt, s, p_lo, op)
+    pal = conv2d(x, wgt, stride=s, transposed=True, padding=p_lo,
+                 output_padding=op, backend="pallas")
+    assert dec.shape == pal.shape == oracle.shape
+    assert_allclose(np.asarray(dec), np.asarray(oracle), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(pal), np.asarray(oracle), rtol=1e-5, atol=1e-5)
+
+
+def _check_grads(case):
+    h, w, cin, cout, k, s, p_lo, op = case
+    x, wgt = _operands(case)
+
+    def loss(fn):
+        return lambda xx, ww: jnp.sum(fn(xx, ww) ** 2)
+
+    gx_o, gw_o = jax.grad(loss(
+        lambda xx, ww: _lax_oracle(xx, ww, s, p_lo, op)), (0, 1))(x, wgt)
+    gx_p, gw_p = jax.grad(loss(
+        lambda xx, ww: conv2d(xx, ww, stride=s, transposed=True,
+                              padding=p_lo, output_padding=op,
+                              backend="pallas")), (0, 1))(x, wgt)
+    assert_allclose(np.asarray(gx_p), np.asarray(gx_o), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(gw_p), np.asarray(gw_o), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------ tier-1 fast subset ---
+
+@pytest.mark.parametrize("case", _FAST, ids=lambda c: "h{}w{}c{}x{}k{}s{}p{}op{}".format(*c))
+def test_random_geometry_forward(case):
+    _check_forward(case)
+
+
+@pytest.mark.parametrize("case", _FAST[:3], ids=lambda c: "h{}w{}c{}x{}k{}s{}p{}op{}".format(*c))
+def test_random_geometry_grads(case):
+    _check_grads(case)
+
+
+def test_dcgan_and_unet_geometries_exact():
+    """The exact-2x even-kernel geometries the generative models run:
+    DCGAN (k=4, p_lo=2) and U-Net (k=2, p_lo=1), both output_padding=0."""
+    for k in (2, 4):
+        case = (6, 5, 3, 5, k, 2, k // 2, 0)
+        _check_forward(case)
+        x, wgt = _operands(case)
+        y = _lax_oracle(x, wgt, 2, k // 2, 0)
+        assert y.shape[1:3] == (12, 10)       # exact 2x upsample
+
+
+def test_zero_conv_planes_k_lt_s():
+    """k < s leaves whole output parities with no live tap: those planes are
+    identically zero on every backend (the k=2, s=3 regression for the
+    zero-conv-plane schedule)."""
+    case = (5, 4, 3, 2, 2, 3, 1, 0)
+    h, w, cin, cout, k, s, p_lo, op = case
+    x, wgt = _operands(case)
+    y = np.asarray(conv2d(x, wgt, stride=s, transposed=True, padding=p_lo,
+                          output_padding=op, backend="pallas"))
+    _check_forward(case)
+    dead_r = [r for r in range(s) if not tr.parity_taps(k, s, p_lo, r)]
+    assert dead_r                           # k < s guarantees a dead parity
+    for r in dead_r:
+        assert np.all(y[:, r::s, :, :] == 0.0)
+        assert np.all(y[:, :, r::s, :] == 0.0)
+
+
+# ----------------------------------------------------------- full slow grid ---
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", _FULL, ids=lambda c: "h{}w{}c{}x{}k{}s{}p{}op{}".format(*c))
+def test_random_geometry_forward_full(case):
+    _check_forward(case)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", _FULL[:8], ids=lambda c: "h{}w{}c{}x{}k{}s{}p{}op{}".format(*c))
+def test_random_geometry_grads_full(case):
+    _check_grads(case)
