@@ -51,14 +51,16 @@ def main(argv: list[str] | None = None) -> None:
 
     from benchmarks import (enet_roofline, fig10_enet_speedup,
                             fig11_dilated_layers, fig12_transposed_layers,
-                            kernel_bench, roofline, table1_throughput)
+                            kernel_bench, roofline, serve_bench,
+                            table1_throughput)
 
     all_rows = []
     print("name,us_per_call,derived")
     for mod in (fig10_enet_speedup, fig11_dilated_layers,
                 fig12_transposed_layers, table1_throughput, kernel_bench,
-                enet_roofline, roofline):
-        kw = {"smoke": True} if (ns.smoke and mod is kernel_bench) else {}
+                serve_bench, enet_roofline, roofline):
+        kw = ({"smoke": True}
+              if (ns.smoke and mod in (kernel_bench, serve_bench)) else {})
         for name, us, derived in mod.run(csv=True, **kw):
             print(f"{name},{us:.1f},{derived}")
             all_rows.append((name, us, derived))

@@ -1,0 +1,119 @@
+"""Generative serving benchmark: measured continuous-batching drains plus
+the cycle-model steady-state serving numbers (DESIGN.md §9).
+
+Two row families, both riding ``BENCH_<rev>.json`` via ``benchmarks/run.py``:
+
+* ``serve.<workload>`` — a real :class:`repro.launch.serve_gen.GenServer`
+  drain on this host: N >= 4 concurrent requests with *mixed* step budgets
+  through the fixed-size batched DDIM loop (plus a single-shot DCGAN
+  batch).  Wall-time per device step; images/s and queue stats in the
+  derived column.  Demo widths — the point is the serving-path plumbing and
+  its trajectory over revisions, not peak FLOPs.
+* ``serve_model.<workload>`` — :func:`repro.core.cycle_model.serve_report`
+  at canonical widths: images/s on the paper's 168-MAC array, decomposed vs
+  the naive zero-laden schedule.  The decomposed-vs-naive throughput ratio
+  is asserted consistent (within 5%) with the per-pass ``report()`` numbers
+  for the same layer table — the acceptance bar of the serving issue.
+
+Usage:
+  PYTHONPATH=src:. python benchmarks/serve_bench.py --smoke   # CI tier-1
+  PYTHONPATH=src:. python benchmarks/serve_bench.py --csv
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import cycle_model as cm
+from repro.core.gen_spec import GEN_WORKLOADS
+
+#: DDIM step budget the canonical-width model rows assume per diffusion
+#: sample (a typical few-dozen-step DDIM schedule); GANs are single-shot.
+MODEL_STEPS = {"dcgan64": 1, "dcgan128": 1, "unet_dec": 25}
+
+
+def _measured_rows(rows: list, smoke: bool) -> None:
+    from repro.launch.serve_gen import GenServer
+
+    if smoke:
+        widths, hw, n_req, steps = (8, 8), 4, 4, (4, 2, 3)
+        nz, ngf = 16, 4
+    else:
+        widths, hw, n_req, steps = (16, 8, 8), 4, 8, (8, 5, 3, 6)
+        nz, ngf = 32, 8
+
+    # mixed-step diffusion drain through the batched loop
+    server = GenServer(batch=4, unet_widths=widths, unet_hw=hw,
+                       dcgan_nz=nz, dcgan_ngf=ngf)
+    for i in range(n_req):
+        server.submit("unet_dec", steps=steps[i % len(steps)], seed=i)
+    t0 = time.perf_counter()
+    images = server.run()
+    wall = time.perf_counter() - t0
+    st = server.stats()
+    assert len(images) == n_req, (len(images), n_req)
+    rows.append((
+        "serve.unet_dec",
+        wall / max(st["device_steps"], 1) * 1e6,
+        f"imgs_per_s={st['images_per_s']:.2f},reqs={n_req},"
+        f"mixed_steps={'/'.join(map(str, steps))},"
+        f"ticks={st['ticks']:.0f},mean_wait={st['mean_wait_ticks']:.1f}"))
+
+    # single-shot GAN batch through the same scheduler (run() returns all
+    # completed requests cumulatively, so check the new rids specifically)
+    rids = [server.submit("dcgan64", seed=100 + i) for i in range(n_req)]
+    t0 = time.perf_counter()
+    images = server.run()
+    wall = time.perf_counter() - t0
+    assert all(images[r] is not None for r in rids)
+    rows.append(("serve.dcgan64", wall / n_req * 1e6,
+                 f"imgs_per_s={n_req / wall:.2f},reqs={n_req}"))
+
+
+def _model_rows(rows: list) -> None:
+    t0 = time.perf_counter()
+    for name, fn in GEN_WORKLOADS.items():
+        layers = fn()
+        steps = MODEL_STEPS[name]
+        srv = cm.serve_report(layers, steps=steps)
+        base = cm.report(layers)
+        ratio = srv["serve_speedup_vs_naive"] / base["speedup_vs_naive"]
+        # acceptance bar: serving throughput ratio consistent with the
+        # per-pass report() speedup to within 5%
+        assert abs(ratio - 1.0) <= 0.05, (name, ratio)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"serve_model.{name}", us,
+            f"imgs_per_s={srv['images_per_s_ours']:.1f},"
+            f"naive_imgs_per_s={srv['images_per_s_naive']:.1f},"
+            f"serve_speedup={srv['serve_speedup_vs_naive']:.2f}x,"
+            f"steps={steps},latency_ms={srv['latency_ms_ours']:.1f}"))
+
+
+def run(csv: bool = False, smoke: bool = False) -> list[tuple]:
+    rows: list[tuple] = []
+    _measured_rows(rows, smoke)
+    _model_rows(rows)
+    if not csv:
+        print(f"== Generative serving (backend={jax.default_backend()}"
+              f"{'; smoke' if smoke else ''}) ==")
+        for name, us, derived in rows:
+            print(f"  {name:22s} {us:12.1f} us  {derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny widths / fewer requests (CI tier-1)")
+    ap.add_argument("--csv", action="store_true", help="CSV rows only")
+    ns = ap.parse_args()
+    out = run(csv=ns.csv, smoke=ns.smoke)
+    if ns.csv:
+        print("name,us_per_call,derived")
+        for name, us, derived in out:
+            print(f"{name},{us:.1f},{derived}")

@@ -292,6 +292,39 @@ def report(layers: list[ConvLayer]) -> dict[str, float]:
     return out
 
 
+def serve_report(layers: list[ConvLayer], *, steps: int = 1,
+                 batch: int = 1) -> dict[str, float]:
+    """Steady-state serving cost of an iterative sampler on the array.
+
+    One served image costs ``steps`` full passes over the workload's layer
+    table (a DDIM trajectory re-runs the same geometry at every timestep;
+    ``steps=1`` is single-shot GAN generation).  Assumptions (DESIGN.md §9):
+    the array executes one MAC stream, so a device batch of ``B`` requests
+    multiplies *latency* by ``B`` while steady-state throughput is
+    batch-invariant — batching exists to amortise host scheduling and weight
+    fetches, not MACs — and scheduling overhead between steps is not
+    modeled.  The decomposed-vs-naive throughput ratio therefore equals the
+    per-pass ``report()['speedup_vs_naive']`` exactly; ``benchmarks/
+    serve_bench.py`` and ``tests/test_serve_gen.py`` pin that consistency.
+    """
+    if steps < 1 or batch < 1:
+        raise ValueError(f"steps/batch must be >= 1, got {steps}/{batch}")
+    base = report(layers)
+    ours = base["our_cycles"] * steps
+    naive = base["naive_cycles"] * steps
+    return {
+        "steps": float(steps),
+        "batch": float(batch),
+        "cycles_per_image_ours": ours,
+        "cycles_per_image_naive": naive,
+        "latency_ms_ours": 1e3 * batch * ours / FREQ_HZ,
+        "latency_ms_naive": 1e3 * batch * naive / FREQ_HZ,
+        "images_per_s_ours": FREQ_HZ / ours,
+        "images_per_s_naive": FREQ_HZ / naive,
+        "serve_speedup_vs_naive": naive / ours,
+    }
+
+
 def efficiency_vs_sparse(l: ConvLayer) -> float:
     """Per-layer efficiency of our work vs the ideal sparse case."""
     return cycles_ideal_sparse(l) / cycles_our_decomposed(l)

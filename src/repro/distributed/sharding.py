@@ -45,6 +45,10 @@ _ACT_CANDIDATES = {
     # sequence dim over the model axis (Megatron-SP); decode (S=1) drops it
     # via the divisibility guard.
     "seq": (("model",),),
+    # generative serving (NHWC image state): the spatial height shards over
+    # the model axis — the phase-batched conv layouts are batch- and
+    # row-parallel, XLA inserts the k-1 halo exchanges.
+    "spatial": (("model",),),
 }
 
 
@@ -168,6 +172,19 @@ def batch_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
     axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
     return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
                                  *([None] * (ndim - 1))))
+
+
+def image_sharding(mesh: Mesh, shape: tuple[int, ...], *,
+                   spatial: bool = False) -> NamedSharding:
+    """NHWC generative-serving state: batch over (pod, data), optionally the
+    spatial height over the model axis (``spatial=True``).
+
+    Used by ``repro.launch.serve_gen`` for the request-batch image state; the
+    usual divisibility guards apply, so a 4-request smoke batch on a 1-device
+    mesh resolves to fully replicated instead of erroring.
+    """
+    logical = ("data", "spatial" if spatial else None, None, None)
+    return NamedSharding(mesh, resolve_spec(mesh, logical[:len(shape)], shape))
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

@@ -1,5 +1,20 @@
-"""Production mesh construction (a FUNCTION — importing never touches jax
-device state; the dry-run sets XLA_FLAGS before first jax init)."""
+"""Mesh factories: one place every loop gets its device mesh from.
+
+``make_production_mesh`` builds the 256-chip single-pod / 512-chip two-pod
+meshes the dry-run and sharding rules target; ``make_smoke_mesh`` builds a
+small ``(data, model)`` mesh over whatever devices exist — 1 CPU device in
+the tests, 8 fake devices under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+— so the same loop code runs at every scale.  Both are FUNCTIONS: importing
+this module never touches jax device state (the dry-run must set XLA_FLAGS
+before the first jax init).
+
+CPU-scale smoke (any launch loop picks the mesh up automatically):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --reduced --steps 3 --batch 8 --seq 32
+"""
 
 from __future__ import annotations
 

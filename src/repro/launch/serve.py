@@ -1,5 +1,18 @@
-"""Batched serving loop: prefill + decode with KV caches and a simple
+"""Batched LM serving loop: prefill + decode with KV caches and a simple
 continuous-batching request queue.
+
+``Server`` holds sharded params + caches and serves fixed-size decode
+batches through one jitted :func:`repro.launch.steps.make_serve_step` with
+the caches donated.  Prefill runs the whole prompt through that same step
+in ONE call (the KV cache takes all ``S`` prompt entries at once and
+attention masks causally within the chunk); ``slow_prefill`` /
+``--slow-prefill`` keeps the token-by-token loop for configs the parallel
+path cannot serve — recurrent-state mixers (mamba/xlstm) and sliding-window
+layers update their caches one token at a time.
+
+The generative sibling — continuous batching of iterative diffusion /
+single-shot GAN sampling over the decomposition engine — lives in
+:mod:`repro.launch.serve_gen` (DESIGN.md §9).
 
 CPU-scale usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced \
@@ -22,14 +35,28 @@ from repro.launch.steps import cache_shardings, make_serve_step
 from repro.models import encdec, transformer
 
 
+def parallel_prefill_ok(cfg) -> bool:
+    """Whether one multi-token serve_step call can prefill ``cfg``.
+
+    Attention KV caches take a whole prompt chunk in one write with a
+    causal-within-chunk mask; recurrent-state mixers (mamba/xlstm) and
+    sliding-window ring buffers update one token at a time, so those
+    configs keep the sequential fallback.
+    """
+    return (not cfg.encoder_layers and cfg.window == 0
+            and all(k == "attn" for k in cfg.block_pattern))
+
+
 class Server:
     """Holds params + caches; serves fixed-size decode batches."""
 
-    def __init__(self, cfg, mesh=None, max_len: int = 256, batch: int = 4):
+    def __init__(self, cfg, mesh=None, max_len: int = 256, batch: int = 4,
+                 slow_prefill: bool = False):
         self.cfg = cfg
         self.mesh = mesh or make_smoke_mesh()
         self.max_len = max_len
         self.batch = batch
+        self.slow_prefill = slow_prefill
         self.mod = encdec if cfg.encoder_layers else transformer
         shd.install(self.mesh)
         with self.mesh:
@@ -41,17 +68,37 @@ class Server:
             self.serve_step = jax.jit(
                 make_serve_step(cfg), donate_argnums=(1,))
 
-    def prefill(self, tokens: np.ndarray):
-        """Run the prompt through decode steps to warm the cache.
+    def parallel_prefill_ok(self) -> bool:
+        """See the module-level :func:`parallel_prefill_ok`."""
+        return parallel_prefill_ok(self.cfg)
 
-        (A production server prefills with the parallel forward; the decode
-        loop here keeps the example minimal and exercises the serve path.)
+    def prefill(self, tokens: np.ndarray, *, slow: bool | None = None):
+        """Warm the cache with the prompt; returns (next_token, caches, pos).
+
+        Default: ONE serve_step call over the whole (B, S) prompt — the
+        parallel prefill forward.  ``slow=True`` (or ``slow_prefill`` /
+        ``--slow-prefill``, or a config the parallel path cannot serve)
+        runs the token-by-token decode loop instead; both paths produce the
+        same caches and next token.
         """
         b, s = tokens.shape
+        if slow is None:
+            slow = self.slow_prefill or not self.parallel_prefill_ok()
+        elif not slow and not self.parallel_prefill_ok():
+            # recurrent-state / windowed caches update one token at a time;
+            # forcing the parallel path would silently corrupt them
+            raise ValueError(
+                f"{self.cfg.name}: parallel prefill unsupported "
+                "(recurrent mixers / sliding window); use slow=True")
         with self.mesh:
             caches = (transformer.init_caches(self.cfg, b, self.max_len)
                       if not self.cfg.encoder_layers else
                       encdec.init_caches(self.cfg, b, self.max_len))
+            if not slow:
+                batch = {"token": jnp.asarray(tokens, jnp.int32),
+                         "cache_pos": jnp.int32(0)}
+                tok, caches = self.serve_step(self.params, caches, batch)
+                return tok, caches, s
             tok = None
             for t in range(s):
                 batch = {"token": jnp.asarray(tokens[:, t:t + 1]),
@@ -77,10 +124,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--slow-prefill", action="store_true",
+                    help="prefill token-by-token through the decode step "
+                         "instead of one parallel forward")
     args = ap.parse_args()
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     server = Server(cfg, batch=args.batch,
-                    max_len=args.prompt_len + args.gen_len + 1)
+                    max_len=args.prompt_len + args.gen_len + 1,
+                    slow_prefill=args.slow_prefill)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len),
                            dtype=np.int32)

@@ -1,0 +1,385 @@
+"""Generative serving loop: continuous-batching iterative decoder sampling
+on the decomposition engine (DESIGN.md §9).
+
+Requests arrive as ``(workload, steps, seed)`` and are packed into
+fixed-size device batches.  Diffusion requests iterate the DDIM step built
+by :func:`repro.launch.steps.make_gen_step` — timestep embedding + U-Net
+decoder forward through the fused transposed-conv kernels + DDIM update —
+one jitted call per scheduler tick with the image state donated.  Because
+the transposed-conv geometry is timestep-*invariant* (the timestep enters
+only as an embedded value), in-flight requests sitting at different
+denoising timesteps share a batch and one compiled step serves the whole
+queue; a slot that finishes is refilled from the queue on the next tick
+while its neighbours keep denoising.  DCGAN requests are single-shot: one
+tick through the k=4/s=2 generator completes every active slot.
+
+This mirrors the LM path (``repro.launch.serve``): the scheduler is
+host-side and dumb, the device step is pure and compiled once.  The image
+state takes its sharding from :func:`repro.distributed.sharding.image_sharding`
+(batch over the data axes, optionally spatial rows over the model axis).
+
+CPU-scale usage:
+
+  PYTHONPATH=src python -m repro.launch.serve_gen --smoke
+  PYTHONPATH=src python -m repro.launch.serve_gen --requests 6 \
+      --steps 8,5,3 --batch 4 --backend xla
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from collections import deque
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cycle_model as cm
+from repro.core.gen_spec import GEN_WORKLOADS, UNET_WIDTHS
+from repro.distributed import sharding as shd
+from repro.launch.steps import DDIM_T_MAX, ddim_timesteps, make_gen_step
+from repro.models import dcgan, unet_decoder
+
+
+def init_noise(seed: int, shape: tuple[int, ...]) -> jax.Array:
+    """Seeded x_T (or latent) — shared by the server and the reference loop
+    so a served request is bit-for-bit reproducible from its seed."""
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@dataclass
+class GenRequest:
+    """One sampling request; ticks are scheduler steps, not wall time."""
+    rid: int
+    workload: str
+    steps: int
+    seed: int
+    submit_tick: int
+    admit_tick: int = -1
+    done_tick: int = -1
+    result: np.ndarray | None = None
+
+    @property
+    def wait_ticks(self) -> int:
+        return self.admit_tick - self.submit_tick
+
+
+class _DiffusionLane:
+    """Fixed-size batch of diffusion slots over one compiled DDIM step."""
+
+    def __init__(self, params: dict, *, batch: int, widths: tuple[int, ...],
+                 hw: int, out_ch: int, backend: str,
+                 interpret: bool | None, decomposed: bool, mesh=None,
+                 spatial: bool = False):
+        size = hw * 2 ** len(widths)
+        self.image_shape = (size, size, out_ch)
+        self.params = params
+        step = make_gen_step(decomposed=decomposed, backend=backend,
+                             interpret=interpret)
+        x = jnp.zeros((batch,) + self.image_shape, jnp.float32)
+        if mesh is not None:
+            sh = shd.image_sharding(mesh, x.shape, spatial=spatial)
+            self.params = jax.device_put(params, shd.replicated(mesh))
+            x = jax.device_put(x, sh)
+            self._step = jax.jit(step, donate_argnums=(1,), out_shardings=sh)
+        else:
+            self._step = jax.jit(step, donate_argnums=(1,))
+        self.x = x
+        self.slots: list[GenRequest | None] = [None] * batch
+        self._traj: list[np.ndarray | None] = [None] * batch
+        self._pos = [0] * batch
+        self.t = np.zeros(batch, np.int32)
+        self.t_next = np.full(batch, -1, np.int32)
+        self.active = np.zeros(batch, bool)
+        self.device_steps = 0
+
+    @property
+    def busy(self) -> bool:
+        return self.active.any()
+
+    def free_slot(self) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, req: GenRequest, slot: int) -> None:
+        traj = ddim_timesteps(req.steps)
+        self.slots[slot] = req
+        self._traj[slot] = traj
+        self._pos[slot] = 0
+        self.t[slot] = traj[0]
+        self.t_next[slot] = traj[1] if req.steps > 1 else -1
+        self.active[slot] = True
+        self.x = self.x.at[slot].set(init_noise(req.seed, self.image_shape))
+
+    def tick(self) -> list[GenRequest]:
+        batch = {"t": jnp.asarray(self.t), "t_next": jnp.asarray(self.t_next),
+                 "active": jnp.asarray(self.active)}
+        self.x = self._step(self.params, self.x, batch)
+        self.device_steps += 1
+        done = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self._pos[i] += 1
+            traj = self._traj[i]
+            if self._pos[i] == len(traj):          # landed on x0
+                req.result = np.asarray(self.x[i])
+                done.append(req)
+                self.slots[i] = self._traj[i] = None
+                self.active[i] = False
+            else:
+                self.t[i] = traj[self._pos[i]]
+                self.t_next[i] = (traj[self._pos[i] + 1]
+                                  if self._pos[i] + 1 < len(traj) else -1)
+        return done
+
+
+class _DCGANLane:
+    """Single-shot generation: one tick drains every active latent slot."""
+
+    def __init__(self, params: dict, *, batch: int, nz: int, backend: str,
+                 interpret: bool | None, decomposed: bool):
+        self.params = params
+        self.nz = nz
+        self._fwd_kw = dict(decomposed=decomposed, backend=backend,
+                            interpret=interpret)
+        self.z = jnp.zeros((batch, nz), jnp.float32)
+        self.slots: list[GenRequest | None] = [None] * batch
+        self.active = np.zeros(batch, bool)
+        self.device_steps = 0
+
+    @property
+    def busy(self) -> bool:
+        return self.active.any()
+
+    def free_slot(self) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self, req: GenRequest, slot: int) -> None:
+        self.slots[slot] = req
+        self.active[slot] = True
+        self.z = self.z.at[slot].set(init_noise(req.seed, (self.nz,)))
+
+    def tick(self) -> list[GenRequest]:
+        imgs = np.asarray(dcgan.forward(self.params, self.z, **self._fwd_kw))
+        self.device_steps += 1
+        done = []
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.result = imgs[i]
+            done.append(req)
+            self.slots[i] = None
+            self.active[i] = False
+        return done
+
+
+class GenServer:
+    """Continuous-batching generative server over the decomposition engine.
+
+    One lane (fixed-size device batch + compiled step) per workload, built
+    lazily on the first request for it.  ``submit`` enqueues, ``step`` runs
+    one scheduler tick (admit into free slots, then one device step per busy
+    lane), ``run`` drains the queue and returns ``rid -> image``.
+
+    Admission is FIFO per workload — a request never overtakes an earlier
+    request for the same lane, and a full lane never blocks another lane —
+    so no request starves (pinned in ``tests/test_serve_gen.py``).
+
+    ``params`` overrides model parameters per workload name (tests and the
+    smoke paths pass tiny-width denoisers); otherwise lanes initialise
+    canonical-width parameters from ``param_seed``.
+    """
+
+    def __init__(self, *, batch: int = 4, backend: str = "xla",
+                 interpret: bool | None = None, decomposed: bool = True,
+                 mesh=None, spatial: bool = False,
+                 unet_widths: tuple[int, ...] = UNET_WIDTHS, unet_hw: int = 8,
+                 out_ch: int = 3, dcgan_nz: int = 100, dcgan_ngf: int = 64,
+                 params: dict | None = None, param_seed: int = 0):
+        self.batch = batch
+        self.backend = backend
+        self.interpret = interpret
+        self.decomposed = decomposed
+        self.mesh = mesh
+        self.spatial = spatial
+        self.unet_widths, self.unet_hw, self.out_ch = unet_widths, unet_hw, out_ch
+        self.dcgan_nz, self.dcgan_ngf = dcgan_nz, dcgan_ngf
+        self._params = dict(params or {})
+        self._param_seed = param_seed
+        self._lanes: dict[str, _DiffusionLane | _DCGANLane] = {}
+        self._pending: deque[GenRequest] = deque()
+        self._done: dict[int, GenRequest] = {}
+        self._tick = 0
+        self._next_rid = 0
+        self._t0: float | None = None
+
+    # -------------------------------------------------------------- lanes --
+    def _lane(self, workload: str):
+        lane = self._lanes.get(workload)
+        if lane is not None:
+            return lane
+        kw = dict(backend=self.backend, interpret=self.interpret,
+                  decomposed=self.decomposed)
+        if workload == "unet_dec":
+            p = self._params.get(workload) or unet_decoder.init_denoiser_params(
+                jax.random.PRNGKey(self._param_seed), widths=self.unet_widths,
+                out_ch=self.out_ch)
+            lane = _DiffusionLane(p, batch=self.batch, widths=self.unet_widths,
+                                  hw=self.unet_hw, out_ch=self.out_ch,
+                                  mesh=self.mesh, spatial=self.spatial, **kw)
+        elif workload in ("dcgan64", "dcgan128"):
+            size = int(workload[5:])
+            p = self._params.get(workload) or dcgan.init_params(
+                jax.random.PRNGKey(self._param_seed), size=size,
+                nz=self.dcgan_nz, ngf=self.dcgan_ngf, out_ch=self.out_ch)
+            lane = _DCGANLane(p, batch=self.batch, nz=self.dcgan_nz, **kw)
+        else:
+            raise ValueError(f"unknown workload {workload!r}; "
+                             f"known: {sorted(GEN_WORKLOADS)}")
+        self._lanes[workload] = lane
+        return lane
+
+    # ---------------------------------------------------------- scheduling --
+    def submit(self, workload: str, *, steps: int = 1, seed: int = 0) -> int:
+        """Enqueue a request; returns its id.  DCGAN is single-shot
+        (``steps`` is forced to 1); diffusion runs a ``steps``-step DDIM
+        trajectory."""
+        self._lane(workload)        # fail fast on unknown workloads
+        if workload != "unet_dec":
+            steps = 1
+        req = GenRequest(self._next_rid, workload, steps, seed, self._tick)
+        self._next_rid += 1
+        self._pending.append(req)
+        return req.rid
+
+    def _admit(self) -> None:
+        kept: deque[GenRequest] = deque()
+        while self._pending:
+            req = self._pending.popleft()
+            lane = self._lane(req.workload)
+            # same-lane FIFO: once one request for a lane waits, later
+            # requests for that lane wait behind it
+            slot = None if any(k.workload == req.workload for k in kept) \
+                else lane.free_slot()
+            if slot is None:
+                kept.append(req)
+            else:
+                req.admit_tick = self._tick
+                lane.admit(req, slot)
+        self._pending = kept
+
+    def step(self) -> list[GenRequest]:
+        """One scheduler tick; returns the requests completed by it."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self._admit()
+        done: list[GenRequest] = []
+        for lane in self._lanes.values():
+            if lane.busy:
+                done.extend(lane.tick())
+        self._tick += 1
+        for req in done:
+            req.done_tick = self._tick
+            self._done[req.rid] = req
+        return done
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain queue + in-flight work; returns ``rid -> image``."""
+        while self._pending or any(l.busy for l in self._lanes.values()):
+            self.step()
+        return {rid: r.result for rid, r in sorted(self._done.items())}
+
+    # ------------------------------------------------------------- metrics --
+    @property
+    def completed(self) -> dict[int, GenRequest]:
+        return dict(self._done)
+
+    def stats(self) -> dict[str, float]:
+        wall = (time.perf_counter() - self._t0) if self._t0 else 0.0
+        dev_steps = sum(l.device_steps for l in self._lanes.values())
+        n = len(self._done)
+        waits = [r.wait_ticks for r in self._done.values()]
+        return {
+            "requests": n,
+            "ticks": self._tick,
+            "device_steps": dev_steps,
+            "wall_s": wall,
+            "images_per_s": n / wall if wall else 0.0,
+            "steps_per_s": dev_steps / wall if wall else 0.0,
+            "mean_wait_ticks": float(np.mean(waits)) if waits else 0.0,
+            "max_wait_ticks": float(np.max(waits)) if waits else 0.0,
+        }
+
+
+def reference_sample(params: dict, *, steps: int, seed: int, image_size: int,
+                     out_ch: int = 3, backend: str = "xla",
+                     interpret: bool | None = None, decomposed: bool = True,
+                     t_max: int = DDIM_T_MAX) -> np.ndarray:
+    """Unbatched single-request DDIM loop — the parity oracle the served
+    (mixed-timestep, continuously batched) path must match to <= 1e-5."""
+    step = jax.jit(make_gen_step(t_max=t_max, decomposed=decomposed,
+                                 backend=backend, interpret=interpret),
+                   donate_argnums=(1,))
+    traj = ddim_timesteps(steps, t_max)
+    x = init_noise(seed, (image_size, image_size, out_ch))[None]
+    for i, t in enumerate(traj):
+        nxt = int(traj[i + 1]) if i + 1 < len(traj) else -1
+        batch = {"t": jnp.full((1,), int(t), jnp.int32),
+                 "t_next": jnp.full((1,), nxt, jnp.int32),
+                 "active": jnp.ones((1,), bool)}
+        x = step(params, x, batch)
+    return np.asarray(x)[0]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workload", default="unet_dec",
+                    choices=sorted(GEN_WORKLOADS))
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--steps", default="8,5,3",
+                    help="comma list of diffusion step budgets, cycled")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--backend", default="xla", choices=("xla", "pallas"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny widths (CI): 16x16 images, small DCGAN")
+    ns = ap.parse_args()
+
+    kw: dict = dict(batch=ns.batch, backend=ns.backend)
+    if ns.smoke or (ns.backend == "pallas" and jax.default_backend() == "cpu"):
+        # interpret-mode pallas needs tiny widths to stay tractable on CPU
+        kw.update(unet_widths=(8, 8), unet_hw=4, dcgan_nz=16, dcgan_ngf=4)
+    server = GenServer(**kw)
+    step_list = [int(s) for s in ns.steps.split(",")]
+    for i in range(ns.requests):
+        server.submit(ns.workload, steps=step_list[i % len(step_list)],
+                      seed=ns.seed + i)
+    images = server.run()
+    st = server.stats()
+    print(f"[serve_gen] {st['requests']} requests "
+          f"({ns.workload}, steps {ns.steps}) in {st['wall_s']:.2f}s over "
+          f"{st['ticks']} ticks / {st['device_steps']} device steps: "
+          f"{st['images_per_s']:.2f} img/s, {st['steps_per_s']:.1f} steps/s")
+    shp = next(iter(images.values())).shape
+    print(f"[serve_gen] image shape {shp}; "
+          f"mean wait {st['mean_wait_ticks']:.1f} ticks "
+          f"(max {st['max_wait_ticks']:.0f})")
+    rep = cm.serve_report(GEN_WORKLOADS[ns.workload](),
+                          steps=max(step_list))
+    print(f"[serve_gen] cycle model ({ns.workload}, canonical widths, "
+          f"{max(step_list)} steps/sample): "
+          f"{rep['images_per_s_ours']:.1f} img/s decomposed vs "
+          f"{rep['images_per_s_naive']:.1f} naive "
+          f"({rep['serve_speedup_vs_naive']:.2f}x)")
+
+
+if __name__ == "__main__":
+    main()

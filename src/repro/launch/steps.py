@@ -1,8 +1,26 @@
-"""Step-function builders: train_step / prefill_step / serve_step per config.
+"""Step-function builders: one jitted step per execution context.
 
-Each builder returns ``(fn, in_specs, in_shardings, out_shardings)`` ready
-for ``jax.jit(fn, in_shardings=...).lower(*specs)`` — used identically by the
-dry-run (abstract) and the real train/serve loops (concrete).
+Every loop in ``repro.launch`` is "build a pure step function, jit it once,
+drive it from a host-side scheduler" — this module holds the builders:
+
+* :func:`make_train_step` — microbatched (grad-accumulation) LM train step;
+  driven by ``repro.launch.train`` and the dry-run.
+* :func:`make_prefill_step` / :func:`make_serve_step` — LM prefill and
+  KV-cached decode; driven by ``repro.launch.serve``.
+* :func:`make_gen_step` — one DDIM denoising step over the diffusion U-Net
+  decoder denoiser (timestep embedding + decoder forward + DDIM update);
+  driven by ``repro.launch.serve_gen``.  Timesteps/activity are *data*, so
+  a whole mixed-timestep request batch shares one compiled step.
+
+The LM builders are shape-polymorphic enough to be used identically by the
+dry-run (``jax.jit(fn, ...).lower(*abstract_specs)`` — no allocation) and
+the real loops (concrete arrays); see :func:`lower_cell`.
+
+CPU-scale smoke (the loops document their own CLIs):
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b --reduced --steps 3
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --reduced
+  PYTHONPATH=src python -m repro.launch.serve_gen --smoke
 """
 
 from __future__ import annotations
@@ -11,6 +29,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shd
@@ -145,6 +164,70 @@ def make_serve_step(cfg: ModelConfig):
         return next_token.astype(jnp.int32), new_caches
 
     return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Generative sampling step (diffusion serving path, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+#: training-noise schedule length the DDIM trajectories subsample.
+DDIM_T_MAX = 1000
+
+
+def ddim_alpha_bar(t_max: int = DDIM_T_MAX) -> jax.Array:
+    """Cumulative signal level ``alpha_bar[t]`` of a linear beta schedule."""
+    betas = jnp.linspace(1e-4, 2e-2, t_max, dtype=jnp.float32)
+    return jnp.cumprod(1.0 - betas)
+
+
+def ddim_timesteps(steps: int, t_max: int = DDIM_T_MAX) -> np.ndarray:
+    """Host-side decreasing timestep trajectory for a ``steps``-step sample.
+
+    Evenly spaced over ``[t_max - 1, 0]`` — each request carries its own
+    trajectory, so requests with different step budgets coexist in one
+    device batch (the per-step geometry is identical; only these values
+    differ).
+    """
+    if not 1 <= steps <= t_max:
+        raise ValueError(f"steps must be in [1, {t_max}], got {steps}")
+    return np.linspace(t_max - 1, 0, steps).round().astype(np.int32)
+
+
+def make_gen_step(*, t_max: int = DDIM_T_MAX, decomposed: bool = True,
+                  backend: str = "xla", interpret: bool | None = None):
+    """One deterministic (eta=0) DDIM step over the U-Net denoiser.
+
+    Returns ``gen_step(params, x, batch) -> x'`` where ``x`` is the noisy
+    image batch (B, S, S, C) and ``batch`` carries per-request vectors:
+
+    * ``t``      (B,) int32 — current timestep of each slot;
+    * ``t_next`` (B,) int32 — next timestep, ``-1`` meaning "this is the
+      final step: land on x0";
+    * ``active`` (B,) bool — padding/idle slots pass through unchanged.
+
+    The step embeds ``t`` (:func:`repro.models.common.timestep_embedding`),
+    runs the denoiser forward — the transposed-conv decoder on the
+    decomposition engine — and applies the DDIM update
+    ``x' = sqrt(ab') * x0_pred + sqrt(1 - ab') * eps``.  All timestep
+    dependence is data, so one jitted instance serves every request mix;
+    the caller donates ``x`` (``jax.jit(..., donate_argnums=(1,))``).
+    """
+    from repro.models import unet_decoder
+
+    alpha_bar = ddim_alpha_bar(t_max)
+
+    def gen_step(params, x, batch):
+        t, t_next, active = batch["t"], batch["t_next"], batch["active"]
+        eps = unet_decoder.denoise(params, x, t, decomposed=decomposed,
+                                   backend=backend, interpret=interpret)
+        ab_t = alpha_bar[t][:, None, None, None]
+        ab_n = jnp.where(t_next >= 0, alpha_bar[jnp.maximum(t_next, 0)],
+                         1.0)[:, None, None, None]
+        x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) * jax.lax.rsqrt(ab_t)
+        x_new = jnp.sqrt(ab_n) * x0 + jnp.sqrt(1.0 - ab_n) * eps
+        return jnp.where(active[:, None, None, None], x_new, x)
+
+    return gen_step
 
 
 def default_microbatches(cfg: ModelConfig) -> int:

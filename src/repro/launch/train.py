@@ -2,7 +2,15 @@
 straggler watchdog, grad accumulation — runs the same code path from 1 CPU
 device to the 512-chip mesh.
 
-Usage (CPU-scale example; examples/train_enet.py covers the paper workload):
+The step itself comes from :func:`repro.launch.steps.make_train_step`
+(microbatched grad accumulation), shardings from
+``repro.distributed.sharding``, and the loop adds the operational shell:
+background checkpointing every ``--ckpt-every`` steps, automatic
+restore-and-resume after a failure (``FailureInjector`` exercises that path
+in tests), heartbeats, and a straggler watchdog.
+
+Usage (CPU-scale; examples/train_enet.py covers the paper workload, and a
+killed run restarted with the same ``--ckpt-dir`` resumes where it died):
 
   PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
       --reduced --steps 20 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt

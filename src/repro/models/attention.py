@@ -112,8 +112,12 @@ def attention(p: dict, x: jax.Array, cfg: ModelConfig, *, kind: str = "attn",
     nh, kvh, hd = cfg.num_heads, cfg.kv_heads, cfg.head_dim
     groups = nh // kvh
     if positions is None:
-        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s)) \
-            if cache_pos is None else jnp.full((b, 1), 0, jnp.int32) + cache_pos
+        # with a cache, token i of the chunk sits at absolute position
+        # cache_pos + i — s == 1 is the decode step, s > 1 parallel prefill
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
+                                     (b, s))
+        if cache_pos is not None:
+            positions = positions + cache_pos
 
     q = (x @ p["wq"]).reshape(b, s, nh, hd)
     kv_src = x if xa is None else xa
@@ -152,10 +156,15 @@ def attention(p: dict, x: jax.Array, cfg: ModelConfig, *, kind: str = "attn",
     if kv_cache is not None and xa is None:
         slot = jnp.arange(sk)
         if kind == "attn_local" and cfg.window and sk <= cfg.window:
-            valid = slot[None, :] < jnp.minimum(cache_pos + 1, sk)
+            valid = slot[None, None, :] < jnp.minimum(cache_pos + s, sk)
+            if s > 1:   # parallel prefill: causal within the written chunk
+                valid = valid & (slot[None, None, :] <= positions[:, :, None])
         else:
-            valid = slot[None, :] <= cache_pos
-        mask = valid[:, None, None, :]                    # (1,1,1,T)
+            # per-query causal bound — for s == 1 this is the classic
+            # slot <= cache_pos decode mask, for s > 1 (parallel prefill)
+            # query i sees slots up to cache_pos + i
+            valid = slot[None, None, :] <= positions[:, :, None]
+        mask = valid[:, None, :, :]                       # (B,1,S,T)
         out = _softmax_attend(qf, kf, vf, mask).astype(x.dtype)
     elif xa is not None or not causal:
         mask = jnp.ones((1, 1, 1, sk), bool)

@@ -15,6 +15,8 @@ change hits every model at once.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -101,6 +103,26 @@ def group_norm(p: dict, x: jax.Array, groups: int = 8,
     return xg.reshape(n, h, w, c) * p["g"] + p["b"]
 
 
+def timestep_embedding(t: jax.Array, dim: int,
+                       max_period: float = 10000.0) -> jax.Array:
+    """Sinusoidal diffusion-timestep embedding (Ho et al. 2020 / transformer
+    positional form).  ``t`` (B,) integer timesteps -> (B, dim) float32.
+
+    The embedding is the only place the timestep enters the denoiser, and it
+    enters as a *value*, never a shape: every sampling step runs the same
+    convolution geometry, which is what lets the generative server batch
+    requests sitting at different timesteps through one compiled step
+    (DESIGN.md §9).
+    """
+    if dim % 2:
+        raise ValueError(f"embedding dim must be even, got {dim}")
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = t.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
 def fold_gn(p: dict) -> tuple[jax.Array, jax.Array]:
     """Fold GroupNorm to the ``(scale, shift)`` the fused epilogues consume.
 
@@ -114,4 +136,4 @@ def fold_gn(p: dict) -> tuple[jax.Array, jax.Array]:
 
 
 __all__ = ["conv_init", "tconv_init", "prelu", "bn_init", "bn", "fold_bn",
-           "gn_init", "group_norm", "fold_gn"]
+           "gn_init", "group_norm", "fold_gn", "timestep_embedding"]

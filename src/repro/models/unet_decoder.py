@@ -34,6 +34,10 @@ from repro.models.common import conv_init as _conv_init
 from repro.models.common import fold_gn as _fold_gn
 from repro.models.common import gn_init as _gn_init
 from repro.models.common import tconv_init as _tconv_init
+from repro.models.common import timestep_embedding
+
+#: timestep-embedding width of the denoiser (``init_denoiser_params``).
+DENOISE_EMB_DIM = 64
 
 _EP_GN_ACT = EpilogueSpec(bn=True, prelu=True)   # folded-GN affine + PReLU
 _EP_ACT = EpilogueSpec(prelu=True)
@@ -96,3 +100,68 @@ def forward(params: dict, x: jax.Array, skips: tuple[jax.Array, ...],
                    backend=backend, interpret=interpret, epilogue=_EP_ACT,
                    alpha=params[f"l{i}_aup"])
     return conv2d(h, params["head"], backend=backend, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Denoiser wrapper: the eps-model a DDIM sampling loop iterates (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _avg_pool(x: jax.Array, factor: int) -> jax.Array:
+    """Exact average pooling by an integer factor (NHWC)."""
+    if factor == 1:
+        return x
+    n, h, w, c = x.shape
+    return x.reshape(n, h // factor, factor, w // factor, factor, c
+                     ).mean(axis=(2, 4))
+
+
+def init_denoiser_params(key, widths: tuple[int, ...] = UNET_WIDTHS,
+                         out_ch: int = 3, emb_dim: int = DENOISE_EMB_DIM,
+                         dtype=jnp.float32) -> dict:
+    """Denoiser ``eps(x_t, t)`` built around the decoder stack.
+
+    The decoder (`init_params`/:func:`forward`) maps mid features + skips to
+    an image; the denoiser closes the loop so the *image itself* can be
+    iterated: cheap 1x1-conv encoders project the average-pooled noisy image
+    onto the mid features and every skip extent, a two-layer MLP of the
+    sinusoidal timestep embedding is broadcast-added to the mid features,
+    and the decoder — where all the transposed-conv work lives — predicts
+    the noise.  The timestep never changes any convolution geometry, so one
+    compiled step serves requests at arbitrary timesteps (DESIGN.md §9).
+    """
+    kd, kst, kt1, kt2, ks = jax.random.split(key, 5)
+    p = {"dec": init_params(kd, widths, out_ch=out_ch, dtype=dtype),
+         "stem": _conv_init(kst, 1, 1, out_ch, widths[0], dtype),
+         "t_w1": (jax.random.normal(kt1, (emb_dim, emb_dim), jnp.float32)
+                  * (2.0 / emb_dim) ** 0.5).astype(dtype),
+         "t_w2": (jax.random.normal(kt2, (emb_dim, widths[0]), jnp.float32)
+                  * (2.0 / emb_dim) ** 0.5).astype(dtype)}
+    for i, (kk, c) in enumerate(zip(jax.random.split(ks, len(widths)),
+                                    widths)):
+        p[f"enc{i}"] = _conv_init(kk, 1, 1, out_ch, c, dtype)
+    return p
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("decomposed", "backend", "interpret"))
+def denoise(params: dict, x_t: jax.Array, t: jax.Array,
+            decomposed: bool = True, backend: str = "xla",
+            interpret: bool | None = None) -> jax.Array:
+    """Predict the noise in ``x_t`` (N, S, S, C) at timesteps ``t`` (N,).
+
+    ``S`` must be ``hw * 2**levels`` for the decoder's mid extent ``hw``
+    (pooling factors are derived from the shapes).  Returns (N, S, S, C).
+    """
+    levels = sum(1 for k in params if k.startswith("enc"))
+    s = x_t.shape[1]
+    hw = s >> levels
+    emb = timestep_embedding(t, params["t_w1"].shape[0])
+    cond = jnp.tanh(emb.astype(x_t.dtype) @ params["t_w1"]) @ params["t_w2"]
+    kw = dict(backend=backend, interpret=interpret)
+    mid = conv2d(_avg_pool(x_t, s // hw), params["stem"], **kw)
+    mid = mid + cond[:, None, None, :]
+    skips = tuple(
+        conv2d(_avg_pool(x_t, s // (hw * 2 ** i)), params[f"enc{i}"], **kw)
+        for i in range(levels))
+    return forward(params["dec"], mid, skips, decomposed=decomposed,
+                   backend=backend, interpret=interpret)

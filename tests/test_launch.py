@@ -1,10 +1,12 @@
-"""Launch layer: shape cells, input specs, skip logic, mesh construction."""
+"""Launch layer: shape cells, input specs, skip logic, mesh construction,
+and the LM server's parallel-vs-sequential prefill parity."""
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.launch.shapes import SHAPES, cell_supported, input_specs
 
 
@@ -63,3 +65,42 @@ def test_default_microbatches_scale():
     assert default_microbatches(get_config("stablelm-1.6b")) == 2
     assert default_microbatches(get_config("qwen3-32b")) == 4
     assert default_microbatches(get_config("jamba-1.5-large-398b")) == 8
+
+
+def test_parallel_prefill_matches_sequential_loop():
+    """The prefill fix: ONE multi-token serve_step call produces the same
+    caches and next token as the token-by-token decode loop."""
+    from repro.launch.serve import Server
+
+    srv = Server(get_reduced("stablelm-1.6b"), max_len=16)
+    assert srv.parallel_prefill_ok()
+    toks = np.random.default_rng(0).integers(0, 256, (2, 6), dtype=np.int32)
+    tok_par, caches_par, pos_par = srv.prefill(toks)
+    tok_seq, caches_seq, pos_seq = srv.prefill(toks, slow=True)
+    assert pos_par == pos_seq == 6
+    assert np.array_equal(np.asarray(tok_par), np.asarray(tok_seq))
+    for a, b in zip(jax.tree.leaves(caches_par), jax.tree.leaves(caches_seq)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-2)   # bf16 caches
+
+
+def test_parallel_prefill_gating():
+    """Sliding-window / recurrent-mixer configs keep the sequential loop."""
+    from repro.launch.serve import parallel_prefill_ok
+
+    assert parallel_prefill_ok(get_reduced("stablelm-1.6b"))
+    assert not parallel_prefill_ok(get_reduced("gemma3-12b"))   # attn_local
+    assert not parallel_prefill_ok(get_reduced("xlstm-1.3b"))   # recurrent
+    assert not parallel_prefill_ok(get_reduced("whisper-small"))  # enc-dec
+    assert not parallel_prefill_ok(get_reduced("jamba-1.5-large-398b"))
+
+
+def test_forced_parallel_prefill_rejected_on_gated_config():
+    """slow=False must not silently corrupt one-token-at-a-time caches."""
+    from repro.launch.serve import Server
+
+    srv = Server(get_reduced("gemma3-12b"), max_len=8)
+    toks = np.zeros((1, 4), dtype=np.int32)
+    with pytest.raises(ValueError, match="parallel prefill unsupported"):
+        srv.prefill(toks, slow=False)

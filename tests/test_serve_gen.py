@@ -1,0 +1,193 @@
+"""Generative serving path (DESIGN.md §9).
+
+Three claim families from the serving issue:
+
+* **queue packing** — with more requests than batch slots, every request
+  completes (no starvation), admission is FIFO within a lane, and a server
+  run is deterministic given the request seeds;
+* **mixed-timestep batching is lossless** — a request served in a
+  continuously-rebatched mixed-step queue matches the unbatched reference
+  DDIM loop to <= 1e-5 on both backends (the transposed-conv geometry is
+  timestep-invariant, so one compiled step serves the whole queue);
+* **cycle-model consistency** — ``serve_report()`` steady-state throughput
+  agrees with the per-pass ``report()`` numbers for the same layer table
+  (within the issue's 5% bar; the model makes them exactly equal).
+
+Tiny widths (8, 8) / 16x16 images keep the interpret-mode pallas loop
+inside the tier-1 budget.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cycle_model as cm
+from repro.core.gen_spec import GEN_WORKLOADS
+from repro.launch.serve_gen import GenServer, init_noise, reference_sample
+from repro.launch.steps import ddim_timesteps, make_gen_step
+from repro.models import dcgan, unet_decoder
+
+_WIDTHS = (8, 8)
+_HW = 4
+_SIZE = _HW * 2 ** len(_WIDTHS)      # 16x16 images
+
+
+@pytest.fixture(scope="module")
+def denoiser():
+    return unet_decoder.init_denoiser_params(jax.random.PRNGKey(0),
+                                             widths=_WIDTHS)
+
+
+def _server(denoiser, batch=3, backend="xla", **kw):
+    return GenServer(batch=batch, backend=backend, unet_widths=_WIDTHS,
+                     unet_hw=_HW, params={"unet_dec": denoiser}, **kw)
+
+
+# ------------------------------------------------------ queue invariants ---
+
+def test_all_requests_complete_mixed_steps(denoiser):
+    """7 requests with mixed step budgets drain through 3 slots."""
+    srv = _server(denoiser, batch=3)
+    steps = [4, 2, 5, 1, 3, 2, 4]
+    rids = [srv.submit("unet_dec", steps=s, seed=i)
+            for i, s in enumerate(steps)]
+    images = srv.run()
+    assert sorted(images) == sorted(rids)
+    for rid in rids:
+        assert images[rid].shape == (_SIZE, _SIZE, 3)
+        assert np.isfinite(images[rid]).all()
+    st = srv.stats()
+    # work conservation: total device steps is bounded by the per-tick
+    # batch, and every request ran its full trajectory
+    assert st["device_steps"] * 3 >= sum(steps)
+    assert st["requests"] == len(steps)
+
+
+def test_admission_is_fifo_within_lane(denoiser):
+    """A request never overtakes an earlier request for the same lane."""
+    srv = _server(denoiser, batch=2)
+    rids = [srv.submit("unet_dec", steps=3, seed=i) for i in range(6)]
+    srv.run()
+    admits = [srv.completed[r].admit_tick for r in rids]
+    assert admits == sorted(admits)
+    assert all(a >= 0 for a in admits)
+    # the queue actually forced waiting (the invariant was exercised)
+    assert srv.completed[rids[-1]].wait_ticks > 0
+
+
+def test_deterministic_given_seeds(denoiser):
+    subs = [(4, 11), (2, 12), (3, 13), (4, 14)]
+    runs = []
+    for _ in range(2):
+        srv = _server(denoiser, batch=2)
+        rids = [srv.submit("unet_dec", steps=s, seed=sd) for s, sd in subs]
+        images = srv.run()
+        runs.append([images[r] for r in rids])
+    for a, b in zip(*runs):
+        np.testing.assert_array_equal(a, b)
+    # different seed -> different sample (the determinism is not collapse)
+    assert not np.array_equal(runs[0][0], runs[0][3])
+
+
+def test_inactive_slots_pass_through(denoiser):
+    """Padding slots are bit-frozen by the active mask."""
+    step = jax.jit(make_gen_step(), donate_argnums=(1,))
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, _SIZE, _SIZE, 3))
+    x0 = np.asarray(x)
+    batch = {"t": jnp.array([500, 400, 300], jnp.int32),
+             "t_next": jnp.array([250, 200, -1], jnp.int32),
+             "active": jnp.array([False, True, False])}
+    y = np.asarray(step(denoiser, x, batch))
+    np.testing.assert_array_equal(y[0], x0[0])
+    np.testing.assert_array_equal(y[2], x0[2])
+    assert not np.array_equal(y[1], x0[1])
+
+
+def test_ddim_trajectories():
+    traj = ddim_timesteps(5)
+    assert traj[0] == 999 and traj[-1] == 0
+    assert (np.diff(traj) < 0).all()
+    assert list(ddim_timesteps(1)) == [999]
+    with pytest.raises(ValueError):
+        ddim_timesteps(0)
+
+
+# ------------------------------------------- served vs unbatched reference ---
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_served_matches_reference_loop(denoiser, backend):
+    """The issue's parity bar: a request served inside a continuously
+    rebatched mixed-timestep queue == the unbatched loop, <= 1e-5."""
+    steps = [3, 1, 2] if backend == "pallas" else [4, 2, 3, 5]
+    srv = _server(denoiser, batch=2, backend=backend)
+    rids = [srv.submit("unet_dec", steps=s, seed=20 + i)
+            for i, s in enumerate(steps)]
+    images = srv.run()
+    for i, rid in enumerate(rids):
+        ref = reference_sample(denoiser, steps=steps[i], seed=20 + i,
+                               image_size=_SIZE, backend=backend)
+        assert np.abs(images[rid] - ref).max() <= 1e-5
+
+
+def test_backends_agree_on_served_output(denoiser):
+    """xla-served vs pallas-served: the fused parity-plane kernels drive the
+    same sampling trajectory to <= 1e-5 *relative* scale (a short
+    trajectory's rsqrt(alpha_bar) amplifies x0 to O(100), so the engines'
+    1e-7 per-conv deviation is compared against the signal magnitude)."""
+    outs = {}
+    for backend in ("xla", "pallas"):
+        srv = _server(denoiser, batch=2, backend=backend)
+        rid = srv.submit("unet_dec", steps=2, seed=7)
+        outs[backend] = srv.run()[rid]
+    scale = max(1.0, float(np.abs(outs["xla"]).max()))
+    assert np.abs(outs["xla"] - outs["pallas"]).max() / scale <= 1e-5
+
+
+def test_dcgan_lane_single_shot():
+    params = dcgan.init_params(jax.random.PRNGKey(1), size=64, nz=16, ngf=4)
+    srv = GenServer(batch=2, dcgan_nz=16, params={"dcgan64": params})
+    a = srv.submit("dcgan64", seed=5)
+    b = srv.submit("dcgan64", seed=6)
+    c = srv.submit("dcgan64", seed=5, steps=99)   # steps forced to 1
+    images = srv.run()
+    assert images[a].shape == (64, 64, 3)
+    assert srv.completed[c].steps == 1
+    np.testing.assert_array_equal(images[a], images[c])   # same seed
+    assert not np.array_equal(images[a], images[b])
+    # single-shot: z latent matches init_noise contract
+    np.testing.assert_array_equal(
+        np.asarray(init_noise(5, (16,))), np.asarray(init_noise(5, (16,))))
+
+
+def test_unknown_workload_rejected(denoiser):
+    with pytest.raises(ValueError, match="unknown workload"):
+        _server(denoiser).submit("vae", steps=3)
+
+
+# ------------------------------------------------- cycle-model consistency ---
+
+@pytest.mark.parametrize("name", sorted(GEN_WORKLOADS))
+def test_serve_report_consistent_with_report(name):
+    layers = GEN_WORKLOADS[name]()
+    base = cm.report(layers)
+    srv = cm.serve_report(layers, steps=25)
+    # the issue's bar: serving throughput ratio within 5% of the per-layer
+    # report(); the model makes them exactly equal
+    assert srv["serve_speedup_vs_naive"] == pytest.approx(
+        base["speedup_vs_naive"], rel=0.05)
+    assert srv["images_per_s_ours"] / srv["images_per_s_naive"] == \
+        pytest.approx(base["speedup_vs_naive"], rel=1e-9)
+
+
+def test_serve_report_scaling():
+    layers = GEN_WORKLOADS["unet_dec"]()
+    one = cm.serve_report(layers, steps=1)
+    many = cm.serve_report(layers, steps=10, batch=4)
+    # throughput scales 1/steps; latency scales steps * batch
+    assert many["images_per_s_ours"] == pytest.approx(
+        one["images_per_s_ours"] / 10, rel=1e-9)
+    assert many["latency_ms_ours"] == pytest.approx(
+        one["latency_ms_ours"] * 40, rel=1e-9)
+    with pytest.raises(ValueError):
+        cm.serve_report(layers, steps=0)

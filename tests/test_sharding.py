@@ -38,6 +38,31 @@ def test_divisibility_guard_drops():
     assert spec == P(None, None)
 
 
+def test_image_sharding_spec_resolution():
+    """Generative-serving NHWC state (launch.serve_gen): batch over data,
+    spatial height over model only when requested AND divisible."""
+    spec = resolve_spec(MESH, ("data", "spatial", None, None),
+                        (32, 64, 64, 3))
+    assert spec == P("data", "model", None, None)
+    # smoke batch of 4 with 16-way data axis -> batch axis dropped; 15 rows
+    # don't divide the model axis -> spatial dropped too
+    spec = resolve_spec(MESH, ("data", "spatial", None, None),
+                        (4, 15, 15, 3))
+    assert spec == P(None, None, None, None)
+
+
+def test_image_sharding_on_real_mesh():
+    import jax
+
+    from repro.distributed.sharding import image_sharding
+    from repro.launch.mesh import make_smoke_mesh
+
+    mesh = make_smoke_mesh()
+    sh = image_sharding(mesh, (4, 16, 16, 3), spatial=True)
+    x = jax.device_put(jax.numpy.zeros((4, 16, 16, 3)), sh)
+    assert x.shape == (4, 16, 16, 3)
+
+
 def test_axis_reuse_guard():
     # both dims want the model axis; only the first gets it
     spec = resolve_spec(MESH, ("model", "expert"), (64, 128))
