@@ -39,11 +39,13 @@ def _epilogue_deltas() -> list[tuple]:
 
 def run(csv: bool = False, workloads: tuple[str, ...] = ("enet", "espnet")
         ) -> list[tuple]:
-    t0 = time.perf_counter()
     rows = []
     for wl in workloads:
         layers = WORKLOADS[wl]()
         for D, ls in sorted(dilated_layer_sets(layers).items()):
+            # per-group timer: a run-wide t0 would accumulate earlier
+            # groups' cost into later rows' us_per_call column
+            t0 = time.perf_counter()
             dense = sum(cm.cycles_ideal_dense(l) for l in ls)
             sparse = sum(cm.cycles_ideal_sparse(l) for l in ls)
             ours = sum(cm.cycles_our_decomposed(l) for l in ls)

@@ -45,10 +45,12 @@ def _tconv_mac_skip(layers: list[ConvLayer]) -> float:
 
 
 def run(csv: bool = False) -> list[tuple]:
-    t0 = time.perf_counter()
     layers = enet_512_layers()
     rows = []
     for size, ls in sorted(transposed_layer_sets(layers).items()):
+        # per-group timer (not run-wide): us_per_call must not accumulate
+        # earlier groups' cost
+        t0 = time.perf_counter()
         dense = sum(cm.cycles_ideal_dense(l) for l in ls)
         sparse = sum(cm.cycles_ideal_sparse(l) for l in ls)
         ours = sum(cm.cycles_our_decomposed(l) for l in ls)
@@ -57,6 +59,7 @@ def run(csv: bool = False) -> list[tuple]:
         rows.append((f"fig12.L{size}.eff_vs_sparse_pct", us,
                      f"{100 * sparse / ours:.1f}"))
     for k, s in GENERAL_CASES:
+        t0 = time.perf_counter()
         l = ConvLayer(f"gen.k{k}s{s}", "transposed", 256, 256, 32, 32, k, k,
                       stride=s, group="transposed",
                       output_padding=min(1, s - 1))
@@ -67,6 +70,7 @@ def run(csv: bool = False) -> list[tuple]:
                      f"{dense / ours:.2f}"))
     # generative decoder workloads: whole-net naive-vs-decomposed costing
     for name, fn in GEN_WORKLOADS.items():
+        t0 = time.perf_counter()
         gl = fn()
         rep = cm.report(gl)
         trn = cm.training_report(gl)

@@ -30,8 +30,6 @@ the tier-1 CI job so the kernel-perf plumbing cannot silently rot.
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
@@ -39,17 +37,14 @@ import jax.numpy as jnp
 def _time(fn, *args, iters: int = 5) -> float:
     """Best-of-``iters`` wall time (us) after a compile/warmup call.
 
-    The minimum, not the mean: on shared/loaded hosts (CI runners, CPU
-    interpret mode) the distribution has a long right tail of scheduler
-    noise, and the minimum is the stable estimator of the actual cost.
+    Delegates to the shared blocking timer (``repro.kernels.util.time_call``)
+    — one audited timed region for the whole repo: ``block_until_ready``
+    inside the timing window (async dispatch must not record launch latency
+    as kernel runtime) and minimum-of-N against scheduler-noise tails.
     """
-    jax.block_until_ready(fn(*args))
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
+    from repro.kernels.util import time_call
+
+    return time_call(fn, *args, iters=iters) * 1e6
 
 
 def epilogue_delta_rows(prefix: str, cases, iters: int,

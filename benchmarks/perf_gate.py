@@ -1,0 +1,192 @@
+"""Trace-driven perf-regression gate over ``BENCH_<rev>.json`` (DESIGN.md §10).
+
+Compares the current bench JSON against the last committed baseline and
+exits nonzero when a tracked number drifts beyond tolerance — the CI step
+that turns the bench trajectory from an uploaded artifact into an enforced
+contract.
+
+Three entry families, with per-family tolerances (all relative):
+
+* **model** — deterministic cycle-model numbers parsed from the benchmark
+  rows' derived column (``fig10.*``, ``fig11.*``, ``fig12.*``, ``table1.*``,
+  ``serve_model.*``).  These only change when the model changes, so the
+  default tolerance is tight (1%): an unintended drift here means a
+  modeled *claim* regressed.
+* **ratio** — the measured wall-time ratio tables (``fused_unfused``,
+  ``tuned_default``).  Wall noise on shared CI hosts is real; default
+  tolerance is loose (75% relative), catching order-of-magnitude rot, not
+  jitter.
+* **calibration** — the calibrated prediction-error report: per
+  ``(kind, backend, device kind)`` key, the MAPE may not grow by more than
+  ``--mape-slack`` percentage points over baseline (a growing MAPE means
+  the cycle model is drifting away from what the hardware does), and the
+  fitted us/cycle slope may not drift beyond ``--calib-tol``.
+
+Wall-time-derived comparisons (ratio + calibration) only apply when the two
+files were produced by the same ``(backend, device kind)`` — cross-machine
+wall numbers are not comparable and are skipped with a note.  Entries
+present in the baseline but missing from the current file FAIL the gate
+(a silently vanished row is how trajectories become empty lists).
+
+Usage:
+  python benchmarks/perf_gate.py                          # newest BENCH_*.json
+      --baseline benchmarks/baselines/bench_smoke_baseline.json
+  python benchmarks/perf_gate.py --current BENCH_abc.json --baseline old.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: benchmark-row prefixes whose derived column is a deterministic
+#: cycle-model number (pure function of the model, no wall time)
+MODEL_PREFIXES = ("fig10.", "fig11.", "fig12.", "table1.", "serve_model.")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def newest_bench(directory: str = ".") -> str | None:
+    paths = glob.glob(os.path.join(directory, "BENCH_*.json"))
+    return max(paths, key=os.path.getmtime) if paths else None
+
+
+def _model_number(derived: str) -> float | None:
+    """A derived column that is one bare number is a model entry value."""
+    try:
+        return float(str(derived).rstrip("x%"))
+    except ValueError:
+        return None
+
+
+def extract(payload: dict) -> dict[str, dict[str, float]]:
+    """Flatten a bench JSON into gate-comparable ``family -> name -> value``."""
+    out: dict[str, dict[str, float]] = {
+        "model": {}, "ratio": {}, "calib_slope": {}, "calib_mape": {},
+    }
+    for row in payload.get("rows", []):
+        name = row.get("name", "")
+        if name.startswith(MODEL_PREFIXES):
+            val = _model_number(row.get("derived", ""))
+            if val is not None:
+                out["model"][name] = val
+    for family, table in payload.get("ratios", {}).items():
+        for name, val in table.items():
+            out["ratio"][f"{family}/{name}"] = float(val)
+    calib = payload.get("calibration", {})
+    for key, co in calib.get("fit", {}).get("coeffs", {}).items():
+        out["calib_slope"][key] = float(co.get("a_us_per_cycle", 0.0))
+    for key, err in calib.get("errors", {}).items():
+        out["calib_mape"][key] = float(err.get("mape_pct", 0.0))
+    return out
+
+
+def _same_host(cur: dict, base: dict) -> bool:
+    keys = ("backend", "device_kind")
+    return all(cur.get(k) == base.get(k) for k in keys)
+
+
+def compare(cur: dict, base: dict, *, model_tol: float = 0.01,
+            ratio_tol: float = 0.75, calib_tol: float = 1.0,
+            mape_slack: float = 10.0) -> tuple[list[str], list[str]]:
+    """Gate the current payload against the baseline.
+
+    Returns ``(violations, notes)`` — the gate fails iff ``violations`` is
+    non-empty.  Tolerances are relative drift ``|cur/base - 1|`` except
+    ``mape_slack`` (absolute percentage points, one-sided: improvements
+    never fail).
+    """
+    cur_e, base_e = extract(cur), extract(base)
+    violations: list[str] = []
+    notes: list[str] = []
+    wall_ok = _same_host(cur, base)
+    if not wall_ok:
+        notes.append(
+            f"wall-derived families skipped: baseline host "
+            f"({base.get('backend')}/{base.get('device_kind')}) != current "
+            f"({cur.get('backend')}/{cur.get('device_kind')})")
+
+    def rel_gate(family: str, tol: float) -> None:
+        for name, bval in sorted(base_e[family].items()):
+            cval = cur_e[family].get(name)
+            if cval is None:
+                violations.append(f"[{family}] {name}: present in baseline, "
+                                  f"missing from current")
+                continue
+            if bval == 0.0:
+                if cval != 0.0:
+                    violations.append(f"[{family}] {name}: baseline 0, "
+                                      f"current {cval:.4g}")
+                continue
+            drift = abs(cval / bval - 1.0)
+            if drift > tol:
+                violations.append(
+                    f"[{family}] {name}: {bval:.4g} -> {cval:.4g} "
+                    f"({100 * drift:.1f}% drift > {100 * tol:.0f}% tol)")
+
+    rel_gate("model", model_tol)
+    if wall_ok:
+        rel_gate("ratio", ratio_tol)
+        rel_gate("calib_slope", calib_tol)
+        for key, bmape in sorted(base_e["calib_mape"].items()):
+            cmape = cur_e["calib_mape"].get(key)
+            if cmape is None:
+                violations.append(f"[calib_mape] {key}: present in baseline, "
+                                  f"missing from current")
+            elif cmape > bmape + mape_slack:
+                violations.append(
+                    f"[calib_mape] {key}: prediction error grew "
+                    f"{bmape:.1f}% -> {cmape:.1f}% (> +{mape_slack:.0f}pt)")
+    new = [n for fam in cur_e for n in cur_e[fam] if n not in base_e[fam]]
+    if new:
+        notes.append(f"{len(new)} new entries not in baseline (tracked from "
+                     f"the next baseline refresh)")
+    return violations, notes
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=None,
+                    help="current BENCH_<rev>.json (default: newest in cwd)")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/bench_smoke_baseline.json")
+    ap.add_argument("--model-tol", type=float, default=0.01)
+    ap.add_argument("--ratio-tol", type=float, default=0.75)
+    ap.add_argument("--calib-tol", type=float, default=1.0)
+    ap.add_argument("--mape-slack", type=float, default=10.0)
+    ns = ap.parse_args(argv)
+
+    current = ns.current or newest_bench()
+    if current is None:
+        print("perf-gate: no BENCH_*.json found in cwd", file=sys.stderr)
+        return 2
+    if not os.path.exists(ns.baseline):
+        # bootstrap: a branch that predates the committed baseline passes
+        # with a note — the gate arms itself once a baseline lands
+        print(f"perf-gate: no baseline at {ns.baseline}; PASS (bootstrap)")
+        return 0
+    cur, base = load(current), load(ns.baseline)
+    violations, notes = compare(
+        cur, base, model_tol=ns.model_tol, ratio_tol=ns.ratio_tol,
+        calib_tol=ns.calib_tol, mape_slack=ns.mape_slack)
+    print(f"perf-gate: {current} vs {ns.baseline} "
+          f"(baseline rev {base.get('rev', '?')})")
+    for n in notes:
+        print(f"  note: {n}")
+    if violations:
+        for v in violations:
+            print(f"  FAIL {v}")
+        print(f"perf-gate: {len(violations)} violation(s)")
+        return 1
+    print("perf-gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

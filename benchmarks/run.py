@@ -1,9 +1,13 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.  ``--emit-json`` additionally
-writes ``BENCH_<rev>.json`` — per-kernel wall times plus the fused/unfused
-and tuned/default ratio tables — so the perf trajectory is machine-tracked
-(CI uploads it as an artifact from the non-blocking slow job).
+Prints ``name,us_per_call,derived`` CSV rows.  ``BENCH_<rev>.json`` — the
+per-kernel wall times, the fused/unfused and tuned/default ratio tables,
+and the calibrated cycles->us prediction-error report
+(``repro.core.calibrate``) — is written by default in ``--smoke`` mode and
+under ``--emit-json`` otherwise, so the perf trajectory is machine-tracked
+from the blocking tier-1 CI job (``benchmarks/perf_gate.py`` fails the
+build on drift against the committed baseline; the non-blocking slow job
+emits the full-size variant).  ``--no-json`` suppresses the file.
 """
 
 from __future__ import annotations
@@ -44,9 +48,16 @@ def _ratios(rows: list[tuple]) -> dict:
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--emit-json", action="store_true",
-                    help="write BENCH_<rev>.json next to the CSV output")
+                    help="write BENCH_<rev>.json next to the CSV output "
+                         "(implied by --smoke)")
+    ap.add_argument("--no-json", action="store_true",
+                    help="never write BENCH_<rev>.json (overrides both)")
     ap.add_argument("--smoke", action="store_true",
-                    help="pass smoke mode to the kernel microbenchmarks")
+                    help="pass smoke mode to the kernel microbenchmarks; "
+                         "emits BENCH_<rev>.json by default")
+    ap.add_argument("--calibrate-backends", default="xla",
+                    help="comma list of backends the calibration capture "
+                         "times (default xla; add pallas on accelerators)")
     ns = ap.parse_args(argv)
 
     from benchmarks import (enet_roofline, fig10_enet_speedup,
@@ -65,9 +76,12 @@ def main(argv: list[str] | None = None) -> None:
             print(f"{name},{us:.1f},{derived}")
             all_rows.append((name, us, derived))
 
-    if ns.emit_json:
+    if (ns.emit_json or ns.smoke) and not ns.no_json:
         import jax
 
+        from repro.core import calibrate
+
+        backends = tuple(b for b in ns.calibrate_backends.split(",") if b)
         rev = _git_rev()
         payload = {
             "rev": rev,
@@ -75,9 +89,15 @@ def main(argv: list[str] | None = None) -> None:
             "backend": jax.default_backend(),
             "device_kind": jax.devices()[0].device_kind,
             "jax_version": jax.__version__,
+            "smoke": ns.smoke,
             "rows": [{"name": n, "us_per_call": round(u, 1), "derived": d}
                      for n, u, d in all_rows],
             "ratios": _ratios(all_rows),
+            # calibrated cycles->us fit + prediction-error report per
+            # (engine kind, backend, device kind) — the trajectory the
+            # perf gate tracks (DESIGN.md §10)
+            "calibration": calibrate.capture_and_fit(
+                smoke=ns.smoke, backends=backends),
         }
         path = f"BENCH_{rev}.json"
         with open(path, "w") as f:

@@ -73,8 +73,10 @@ def _measured_rows(rows: list, smoke: bool) -> None:
 
 
 def _model_rows(rows: list) -> None:
-    t0 = time.perf_counter()
     for name, fn in GEN_WORKLOADS.items():
+        # per-row timer: a shared t0 would fold every earlier workload's
+        # cost into later rows' us_per_call column
+        t0 = time.perf_counter()
         layers = fn()
         steps = MODEL_STEPS[name]
         srv = cm.serve_report(layers, steps=steps)

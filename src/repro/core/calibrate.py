@@ -1,0 +1,393 @@
+"""Calibration layer: modeled cycles -> measured wall time (DESIGN.md §10).
+
+The cycle model (:mod:`repro.core.cycle_model`) is purely analytical — it
+counts cycles on the paper's 168-MAC array.  This module grounds it: it
+captures per-op wall times from the executable engines (blocking timer,
+best-of-N), pairs each measurement with the modeled cycle count of the same
+geometry, and fits a least-squares affine map
+
+    ``us_measured ~= a * cycles_modeled + b``
+
+per ``(engine kind, backend, device kind)`` key.  ``a`` is the effective
+microseconds-per-modeled-cycle of this host (its inverse is the host's
+"array rate"), ``b`` the fixed per-call dispatch overhead.  Prediction-error
+reports (per-sample relative error + MAPE per key) are emitted into
+``BENCH_<rev>.json`` by ``benchmarks/run.py`` and gated over revisions by
+``benchmarks/perf_gate.py``.
+
+Consumers:
+
+* ``benchmarks/run.py`` — ``capture_and_fit()`` builds the ``calibration``
+  section of the bench JSON (samples, coefficients, error report);
+* ``repro.kernels.autotune`` — ``tile_scores()`` ranks sweep candidates so
+  only the model-promising few are timed;
+* ``repro.launch.serve_gen.GenServer`` — ``predict_layers()`` turns a
+  workload's layer table into a calibrated admission estimate;
+* ``cycle_model.serve_report(..., calibration=...)`` — calibrated latency
+  keys next to the 500 MHz array numbers.
+
+Everything here is dependency-free beyond jax/numpy; the fit is closed-form
+(no scipy).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import pathlib
+from dataclasses import asdict, dataclass
+
+from repro.core import cycle_model as cm
+from repro.core.enet_spec import ConvLayer
+
+#: engine kinds, matching ``repro.kernels.autotune.KINDS``
+KINDS = ("dense", "dilated", "tconv")
+
+#: ``ConvLayer.kind`` -> engine kind, for costing layer tables
+KIND_OF_LAYER = {"conv": "dense", "dilated": "dilated", "transposed": "tconv"}
+
+
+def _device_kind() -> str:
+    import jax
+
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:
+        kind = "unknown"
+    return "".join(c if c.isalnum() else "_" for c in kind)
+
+
+def key_of(kind: str, backend: str, device_kind: str | None = None) -> str:
+    """Canonical calibration key ``kind/backend/device_kind``."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown engine kind {kind!r}; known: {KINDS}")
+    return f"{kind}/{backend}/{device_kind or _device_kind()}"
+
+
+@dataclass(frozen=True)
+class Sample:
+    """One (modeled cycles, measured wall time) observation."""
+    kind: str           # dense | dilated | tconv
+    backend: str        # xla | pallas
+    device_kind: str
+    name: str           # geometry tag, e.g. "dense/32x32x16->32/k3s1"
+    cycles: float       # modeled cycles (cycle_model costing of the geometry)
+    us: float           # measured microseconds (blocking, best-of-N)
+
+    @property
+    def key(self) -> str:
+        return key_of(self.kind, self.backend, self.device_kind)
+
+
+@dataclass
+class Coeffs:
+    """Affine fit ``us = a * cycles + b`` for one key."""
+    a_us_per_cycle: float
+    b_us: float
+    n: int              # samples the fit saw
+
+    def predict(self, cycles: float) -> float:
+        return self.a_us_per_cycle * cycles + self.b_us
+
+
+def _fit_one(pairs: list[tuple[float, float]]) -> Coeffs:
+    """Closed-form least squares on (cycles, us) pairs.
+
+    Degenerate cases are resolved toward physical sanity: a single sample
+    (or a single distinct abscissa) fits a pure slope through the origin;
+    negative intercepts (tiny-op noise) are clamped to 0 and the slope
+    refit; the slope itself is clamped >= 0.
+    """
+    n = len(pairs)
+    if n == 0:
+        raise ValueError("cannot fit a calibration on zero samples")
+    sx = sum(c for c, _ in pairs)
+    sy = sum(u for _, u in pairs)
+    sxx = sum(c * c for c, _ in pairs)
+    sxy = sum(c * u for c, u in pairs)
+    denom = n * sxx - sx * sx
+    if n == 1 or abs(denom) < 1e-12 * max(sxx, 1.0):
+        a = (sy / sx) if sx else 0.0
+        return Coeffs(max(a, 0.0), 0.0, n)
+    a = (n * sxy - sx * sy) / denom
+    b = (sy - a * sx) / n
+    if b < 0.0 or a < 0.0:
+        # refit through the origin — a negative dispatch overhead (or a
+        # negative rate) is measurement noise, not physics
+        a = (sxy / sxx) if sxx else 0.0
+        return Coeffs(max(a, 0.0), 0.0, n)
+    return Coeffs(a, b, n)
+
+
+class Calibration:
+    """Fitted cycles->us maps, one :class:`Coeffs` per key."""
+
+    def __init__(self, coeffs: dict[str, Coeffs] | None = None):
+        self.coeffs: dict[str, Coeffs] = dict(coeffs or {})
+
+    # ------------------------------------------------------------- fitting --
+    @classmethod
+    def fit(cls, samples: list[Sample]) -> "Calibration":
+        by_key: dict[str, list[tuple[float, float]]] = {}
+        for s in samples:
+            by_key.setdefault(s.key, []).append((s.cycles, s.us))
+        return cls({k: _fit_one(v) for k, v in sorted(by_key.items())})
+
+    # ---------------------------------------------------------- prediction --
+    def predict(self, kind: str, cycles: float, *, backend: str = "xla",
+                device_kind: str | None = None) -> float | None:
+        """Predicted wall microseconds, or ``None`` if the key is unfitted."""
+        co = self.coeffs.get(key_of(kind, backend, device_kind))
+        return None if co is None else co.predict(cycles)
+
+    def predict_layers(self, layers: list[ConvLayer], *, backend: str = "xla",
+                       device_kind: str | None = None) -> float | None:
+        """Calibrated microseconds for one pass over a layer table.
+
+        Sums per-layer predictions (each layer is one engine dispatch, so
+        each pays its key's ``b_us`` overhead).  Returns ``None`` if any
+        layer's kind has no fitted coefficients — a partial estimate would
+        silently undercount.
+        """
+        total = 0.0
+        for l in layers:
+            us = self.predict(KIND_OF_LAYER[l.kind],
+                              cm.cycles_our_decomposed(l),
+                              backend=backend, device_kind=device_kind)
+            if us is None:
+                return None
+            total += us
+        return total
+
+    # ------------------------------------------------------ error reports --
+    def error_report(self, samples: list[Sample]) -> dict[str, dict]:
+        """Prediction-error table per key: the calibrated-model residuals.
+
+        ``err_pct = 100 * (predicted - measured) / measured`` per sample;
+        ``mape_pct`` is the mean absolute of those — the headline number the
+        perf gate tracks over revisions.
+        """
+        out: dict[str, dict] = {}
+        for s in samples:
+            co = self.coeffs.get(s.key)
+            if co is None:
+                continue
+            pred = co.predict(s.cycles)
+            err_pct = 100.0 * (pred - s.us) / s.us if s.us else 0.0
+            e = out.setdefault(s.key, {
+                "a_us_per_cycle": co.a_us_per_cycle, "b_us": co.b_us,
+                "n": co.n, "samples": [],
+            })
+            e["samples"].append({
+                "name": s.name, "cycles": s.cycles,
+                "us": round(s.us, 3), "pred_us": round(pred, 3),
+                "err_pct": round(err_pct, 2),
+            })
+        for e in out.values():
+            errs = [abs(r["err_pct"]) for r in e["samples"]]
+            e["mape_pct"] = round(sum(errs) / len(errs), 2) if errs else 0.0
+            e["max_abs_err_pct"] = round(max(errs), 2) if errs else 0.0
+        return out
+
+    # --------------------------------------------------------- persistence --
+    def to_payload(self) -> dict:
+        return {"schema": 1,
+                "coeffs": {k: asdict(v) for k, v in sorted(self.coeffs.items())}}
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "Calibration":
+        return cls({k: Coeffs(**v)
+                    for k, v in payload.get("coeffs", {}).items()})
+
+    def save(self, path: str | pathlib.Path) -> None:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(self.to_payload(), indent=1))
+        tmp.replace(p)
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "Calibration":
+        return cls.from_payload(json.loads(pathlib.Path(path).read_text()))
+
+
+def default_cache_path() -> pathlib.Path:
+    """On-disk home of the host's calibration table (mirrors autotune's)."""
+    base = os.environ.get("REPRO_CALIBRATION_CACHE")
+    root = pathlib.Path(base) if base else (
+        pathlib.Path.home() / ".cache" / "repro-calibration")
+    return root / f"{_device_kind()}-v1.json"
+
+
+# ---------------------------------------------------------------------------
+# Capture: run geometries through the real engines, timed + modeled
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CaptureCase:
+    """One geometry to measure: enough to build both the executable call and
+    the :class:`ConvLayer` the cycle model costs."""
+    kind: str
+    x_shape: tuple      # (N, H, W, Cin)
+    w_shape: tuple      # (kh, kw, Cin, Cout)
+    stride: int = 1
+    dilation: int = 1
+    output_padding: int = 1     # tconv only
+
+    @property
+    def name(self) -> str:
+        n, h, w, cin = self.x_shape
+        kh, kw, _, cout = self.w_shape
+        return (f"{self.kind}/{n}x{h}x{w}x{cin}->{cout}"
+                f"/k{kh}s{self.stride}d{self.dilation}")
+
+
+def layer_of(case: CaptureCase) -> ConvLayer:
+    """The :class:`ConvLayer` whose modeled cycles match one capture case."""
+    n, h, w, cin = case.x_shape
+    kh, kw, _, cout = case.w_shape
+    if case.kind == "dense":
+        ho, wo = -(-h // case.stride), -(-w // case.stride)
+        return ConvLayer(case.name, "conv", ho, wo, cin, cout, kh, kw,
+                         stride=case.stride)
+    if case.kind == "dilated":
+        ho, wo = -(-h // case.stride), -(-w // case.stride)
+        return ConvLayer(case.name, "dilated", ho, wo, cin, cout, kh, kw,
+                         D=case.dilation - 1, stride=case.stride,
+                         group="dilated")
+    from repro.core import transposed as tr
+
+    p_lo = (kh - 1) // 2
+    ho = tr.out_size(h, case.stride, kh, p_lo, p_lo + case.output_padding)
+    wo = tr.out_size(w, case.stride, kw, p_lo, p_lo + case.output_padding)
+    return ConvLayer(case.name, "transposed", ho, wo, cin, cout, kh, kw,
+                     stride=case.stride, group="transposed",
+                     output_padding=case.output_padding, padding=p_lo)
+
+
+def modeled_cycles(case: CaptureCase) -> float:
+    """Modeled decomposed cycles of one case (batch scales linearly)."""
+    return case.x_shape[0] * cm.cycles_our_decomposed(layer_of(case))
+
+
+def default_cases(smoke: bool = True) -> list[CaptureCase]:
+    """The capture sweep: a few sizes per engine kind so each key's fit sees
+    a spread of cycle counts (slope + intercept need >= 2 abscissae)."""
+    if smoke:
+        hws = (16, 32, 48)      # 3 abscissae: the affine fit has residuals
+    else:
+        hws = (16, 32, 64, 96, 128)
+    cases = []
+    for hw in hws:
+        c = 16
+        cases.append(CaptureCase("dense", (1, hw, hw, c), (3, 3, c, c)))
+        cases.append(CaptureCase("dilated", (1, hw, hw, c), (3, 3, c, c),
+                                 dilation=4))
+        cases.append(CaptureCase("tconv", (1, hw, hw, c), (3, 3, c, c),
+                                 stride=2))
+    return cases
+
+
+def measure_case(case: CaptureCase, *, backend: str = "xla",
+                 iters: int = 3) -> float:
+    """Blocking best-of-``iters`` wall microseconds of one engine dispatch."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.decompose import conv2d
+    from repro.kernels.util import time_call
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, case.x_shape, jnp.float32)
+    w = jax.random.normal(k2, case.w_shape, jnp.float32)
+    call = jax.jit(lambda a, b: conv2d(
+        a, b, stride=case.stride, dilation=case.dilation,
+        transposed=case.kind == "tconv",
+        output_padding=case.output_padding if case.kind == "tconv" else 0,
+        backend=backend))
+    return time_call(call, x, w, iters=iters) * 1e6
+
+
+def capture_samples(*, smoke: bool = True, backends: tuple[str, ...] = ("xla",),
+                    iters: int = 3,
+                    cases: list[CaptureCase] | None = None) -> list[Sample]:
+    """Measure the capture sweep on this host; returns fit-ready samples.
+
+    ``backends`` defaults to xla only — the pallas kernels run in interpret
+    mode on CPU hosts, where wall time measures the interpreter, not the
+    kernel; pass ``("xla", "pallas")`` on a real accelerator (or to track
+    the interpret-mode trajectory explicitly).
+    """
+    dev = _device_kind()
+    cases = default_cases(smoke) if cases is None else cases
+    out = []
+    for backend in backends:
+        for case in cases:
+            us = measure_case(case, backend=backend, iters=iters)
+            out.append(Sample(case.kind, backend, dev, case.name,
+                              modeled_cycles(case), us))
+    return out
+
+
+def capture_and_fit(*, smoke: bool = True,
+                    backends: tuple[str, ...] = ("xla",),
+                    iters: int = 3) -> dict:
+    """The ``calibration`` section of ``BENCH_<rev>.json``: capture, fit,
+    and report prediction errors in one payload."""
+    samples = capture_samples(smoke=smoke, backends=backends, iters=iters)
+    calib = Calibration.fit(samples)
+    return {
+        "device_kind": _device_kind(),
+        "smoke": smoke,
+        "fit": calib.to_payload(),
+        "errors": calib.error_report(samples),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Tile-candidate scoring (consumed by repro.kernels.autotune)
+# ---------------------------------------------------------------------------
+
+def tile_scores(h_out: int, cout: int, cands: list[tuple[int, int]],
+                *, kind: str = "dense", backend: str = "xla",
+                base_cycles: float | None = None,
+                calibration: "Calibration | None" = None
+                ) -> list[tuple[float, tuple[int, int]]]:
+    """Model-driven score per ``(th, tc)`` candidate (lower is better).
+
+    The analytic part is tile-quantization waste: a ``(th, tc)`` grid pads
+    the output to ``ceil(h_out/th)*th x ceil(cout/tc)*tc``, so the padded
+    fraction is the work multiplier.  When a :class:`Calibration` knows this
+    ``(kind, backend)`` key, its fitted per-call overhead ``b_us`` (relative
+    to the modeled compute time ``a * cycles``) weights a per-grid-cell
+    launch term — small tiles mean more cells, and on hosts where dispatch
+    overhead dominates the calibrated score prunes them; without a fit the
+    cell term uses a conservative constant weight.
+
+    Returns ``(score, cand)`` sorted ascending, ties keeping candidate
+    order (same determinism rule as the sweep itself).
+    """
+    cell_w = 1e-3
+    if calibration is not None and base_cycles:
+        co = calibration.coeffs.get(key_of(kind, backend))
+        if co is not None and co.a_us_per_cycle > 0:
+            compute_us = co.a_us_per_cycle * base_cycles
+            if compute_us > 0:
+                cell_w = co.b_us / compute_us
+    scored = []
+    for i, (th, tc) in enumerate(cands):
+        pad = (math.ceil(h_out / th) * th / h_out) * \
+              (math.ceil(cout / tc) * tc / cout)
+        cells = math.ceil(h_out / th) * math.ceil(cout / tc)
+        scored.append((pad + cell_w * cells, i, (th, tc)))
+    scored.sort(key=lambda t: (t[0], t[1]))
+    return [(s, c) for s, _, c in scored]
+
+
+__all__ = [
+    "KINDS", "KIND_OF_LAYER", "Sample", "Coeffs", "Calibration",
+    "CaptureCase", "key_of", "layer_of", "modeled_cycles", "default_cases",
+    "measure_case", "capture_samples", "capture_and_fit", "tile_scores",
+    "default_cache_path",
+]

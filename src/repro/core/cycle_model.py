@@ -259,10 +259,29 @@ def _group_speedup(gs: GroupStats) -> float:
     return gs.cycles_dense / gs.cycles_ours if gs.cycles_ours else 1.0
 
 
+#: neutral report for an empty (or zero-cycle) layer list: no work means no
+#: speedup claim — ratios are 1.0, shares/cycles/throughput are 0.  Guarded
+#: here rather than at call sites so ``serve_report``/``training_report`` and
+#: ad-hoc callers (e.g. admission control on a not-yet-populated lane) never
+#: trip a ``ZeroDivisionError``.
+_EMPTY_REPORT = {
+    "total_macs_dense": 0, "ideal_dense_cycles": 0.0, "our_cycles": 0.0,
+    "overall_speedup": 1.0, "cycle_reduction_pct": 0.0, "naive_cycles": 0.0,
+    "speedup_vs_naive": 1.0, "cycle_reduction_vs_naive_pct": 0.0,
+    "share_dilated_pct": 0.0, "share_transposed_pct": 0.0,
+    "share_general_pct": 0.0, "ours_dilated_pct": 0.0,
+    "ours_transposed_pct": 0.0, "ours_general_pct": 0.0,
+    "dilated_speedup": 1.0, "transposed_speedup": 1.0,
+    "peak_gops": MACS_PER_CYCLE * 2 * FREQ_HZ / 1e9, "effective_gops": 0.0,
+}
+
+
 def report(layers: list[ConvLayer]) -> dict[str, float]:
     """The paper's headline numbers, computed from the model."""
     g = summarize(layers)
     tot = g["total"]
+    if not tot.cycles_dense or not tot.cycles_ours:
+        return dict(_EMPTY_REPORT)
     naive = float(sum(cycles_our_general(l) for l in layers))
     out = {
         "total_macs_dense": tot.macs_dense,
@@ -293,7 +312,8 @@ def report(layers: list[ConvLayer]) -> dict[str, float]:
 
 
 def serve_report(layers: list[ConvLayer], *, steps: int = 1,
-                 batch: int = 1) -> dict[str, float]:
+                 batch: int = 1, calibration=None,
+                 backend: str = "xla") -> dict[str, float]:
     """Steady-state serving cost of an iterative sampler on the array.
 
     One served image costs ``steps`` full passes over the workload's layer
@@ -306,13 +326,29 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
     modeled.  The decomposed-vs-naive throughput ratio therefore equals the
     per-pass ``report()['speedup_vs_naive']`` exactly; ``benchmarks/
     serve_bench.py`` and ``tests/test_serve_gen.py`` pin that consistency.
+
+    ``calibration`` (a :class:`repro.core.calibrate.Calibration`) adds
+    host-grounded keys next to the 500 MHz array numbers:
+    ``calibrated_us_per_image`` / ``calibrated_images_per_s`` predict THIS
+    host's wall time for one decomposed pass x ``steps`` on ``backend``
+    (omitted when the calibration lacks a fitted key for some layer kind).
     """
     if steps < 1 or batch < 1:
         raise ValueError(f"steps/batch must be >= 1, got {steps}/{batch}")
     base = report(layers)
     ours = base["our_cycles"] * steps
     naive = base["naive_cycles"] * steps
-    return {
+    if not ours or not naive:
+        # empty layer table (e.g. admission estimate for an unknown/empty
+        # workload): zero cost, neutral ratio — not a ZeroDivisionError
+        return {
+            "steps": float(steps), "batch": float(batch),
+            "cycles_per_image_ours": 0.0, "cycles_per_image_naive": 0.0,
+            "latency_ms_ours": 0.0, "latency_ms_naive": 0.0,
+            "images_per_s_ours": 0.0, "images_per_s_naive": 0.0,
+            "serve_speedup_vs_naive": 1.0,
+        }
+    out = {
         "steps": float(steps),
         "batch": float(batch),
         "cycles_per_image_ours": ours,
@@ -323,6 +359,13 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
         "images_per_s_naive": FREQ_HZ / naive,
         "serve_speedup_vs_naive": naive / ours,
     }
+    if calibration is not None:
+        us = calibration.predict_layers(layers, backend=backend)
+        if us is not None:
+            out["calibrated_us_per_image"] = us * steps
+            out["calibrated_images_per_s"] = (
+                1e6 / (us * steps) if us else 0.0)
+    return out
 
 
 def efficiency_vs_sparse(l: ConvLayer) -> float:
@@ -394,27 +437,73 @@ def adjoint_layer(l: ConvLayer) -> ConvLayer:
                      l.kh, l.kw)
 
 
+def wgrad_contention(l: ConvLayer, n: int = N_ROWS, b: int = N_BLOCKS) -> float:
+    """Port-contention multiplier of the tap-gather weight-gradient pass.
+
+    ``dL/dw`` *accumulates into* the weight ports instead of holding static
+    weights in them, which costs three array constraints the old full-rate
+    model ignored (each factor is >= 1; 1.0 means no loss):
+
+    * **tap packing** — a PE block's 3 weight ports hold 3 tap-accumulators
+      for the duration of a reduction, so the gather streams the shared
+      input broadcast in ``ceil(taps/3)`` port groups rather than packing
+      ``taps x cin x cout`` across all ``3*B`` ports at once (the forward
+      transposed trick of Fig. 9 is unavailable: an accumulator cannot move
+      ports mid-reduction).  Dense/dilated layers pack their column vector
+      ``kh x cin`` in groups of 3 exactly like the forward schedule.
+    * **cout tiling** — output-channel gradient blocks tile across the ``B``
+      PE blocks (ceil loss when ``cout % B != 0``).
+
+    No row-tiling term: in ``dL/dw`` the spatial positions are the
+    *contraction* dimension (the output is the ``k x k x cin x cout`` weight
+    block, not a row-tiled image), so the gather streams rows contiguously —
+    the forward schedules' ``ceil(H/n)`` output-tiling loss has no analogue.
+    """
+    cout_tile = _ceil(l.cout, b) * b / l.cout
+    if l.kind == "transposed":
+        taps = l.kh * l.kw
+        tap_pack = _ceil(taps, 3) * 3 / taps
+    else:
+        col = l.kh * l.cin
+        tap_pack = _ceil(col, 3) * 3 / col
+    return tap_pack * cout_tile
+
+
 def cycles_wgrad(l: ConvLayer) -> float:
-    """Cycles of ``dL/dw``: tap-gather correlations, dense MXU work.
+    """Cycles of ``dL/dw``: tap-gather correlations on the array.
 
     Each nonzero forward MAC contributes exactly one weight-gradient MAC,
-    gathered phase-contiguously (no inserted zeros) — full-rate dense
-    contraction on the array.
+    gathered phase-contiguously (no inserted zeros) — but the gather does
+    NOT sustain the full 168-MAC rate: the explicit
+    :func:`wgrad_contention` term models the port/tiling losses of
+    accumulating into the weight ports (the old model assumed full array
+    rate, which overstated the training-side win).
     """
-    return ideal_sparse_macs(l) / MACS_PER_CYCLE
+    return ideal_sparse_macs(l) / MACS_PER_CYCLE * wgrad_contention(l)
 
 
 def training_report(layers: list[ConvLayer]) -> dict[str, float]:
     """Forward + backward cycle model (the EcoFlow setting).
 
     Backward = input-gradient pass (each layer costed as its adjoint layer,
-    executed decomposed) + weight-gradient pass (tap-gather correlations).
-    The naive baseline executes the same adjoints with zero-laden dense
-    schedules (``cycles_our_general``) and the weight gradients over the
-    zero-inserted geometry (``ideal_dense_macs``).
+    executed decomposed) + weight-gradient pass (tap-gather correlations with
+    the explicit :func:`wgrad_contention` port term).  The naive baseline
+    executes the same adjoints with zero-laden dense schedules
+    (``cycles_our_general``) and the weight gradients over the zero-inserted
+    geometry (``ideal_dense_macs``).
+
+    An empty (or zero-cycle) layer list returns zero cycles and neutral 1.0
+    speedups rather than raising ``ZeroDivisionError`` — same policy as
+    ``report()``'s absent-group guard.
     """
     fwd_ours = sum(cycles_our_decomposed(l) for l in layers)
     fwd_naive = sum(cycles_our_general(l) for l in layers)
+    if not fwd_ours or not fwd_naive:
+        return {
+            "fwd_cycles": 0.0, "bwd_cycles": 0.0, "train_cycles": 0.0,
+            "fwd_speedup_vs_naive": 1.0, "bwd_speedup_vs_naive": 1.0,
+            "train_speedup_vs_naive": 1.0,
+        }
     adj = [adjoint_layer(l) for l in layers]
     bwd_ours = (sum(cycles_our_decomposed(a) for a in adj)
                 + sum(cycles_wgrad(l) for l in layers))

@@ -29,7 +29,6 @@ from __future__ import annotations
 import json
 import os
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp
@@ -154,24 +153,44 @@ def _build_call(kind: str, x: jax.Array, w: jax.Array, th: int, tc: int,
 
 
 def _time_candidate(call, iters: int) -> float:
-    """Best-of-``iters`` wall time (s) after a compile/warmup call."""
-    jax.block_until_ready(call())
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(call())
-        best = min(best, time.perf_counter() - t0)
-    return best
+    """Best-of-``iters`` wall time (s) after a compile/warmup call.
+
+    Delegates to the shared blocking timer (``repro.kernels.util.time_call``)
+    so the timed region always includes ``jax.block_until_ready`` — async
+    dispatch must not record launch latency as kernel runtime.
+    """
+    from repro.kernels.util import time_call
+
+    return time_call(call, iters=iters)
+
+
+def _prune_default() -> int | None:
+    """Sweep-prune width from ``$REPRO_AUTOTUNE_PRUNE`` (unset/0 = off)."""
+    raw = os.environ.get("REPRO_AUTOTUNE_PRUNE", "")
+    try:
+        k = int(raw)
+    except ValueError:
+        return None
+    return k if k > 0 else None
 
 
 def tune(kind: str, x_shape: tuple, w_shape: tuple, *, stride: int = 1,
          dilation: int = 1, dtype=jnp.float32, padding=None,
          output_padding: int | None = None, iters: int = 3,
-         cands: list[tuple[int, int]] | None = None) -> tuple[int, int]:
+         cands: list[tuple[int, int]] | None = None,
+         prune: int | None = None, calibration=None) -> tuple[int, int]:
     """Sweep the candidate grid for one geometry and persist the winner.
 
     Deterministic given timings: candidates are visited in a fixed order and
     ties keep the earlier candidate.  Returns the winning ``(th, tc)``.
+
+    ``prune`` (or ``$REPRO_AUTOTUNE_PRUNE``) caps how many candidates are
+    actually *timed*: the grid is ranked by the calibrated cost model
+    (``repro.core.calibrate.tile_scores`` — tile-quantization waste plus a
+    per-grid-cell overhead term weighted by the fitted dispatch cost when a
+    ``calibration`` is passed) and only the top ``prune`` run.  The current
+    default tiling is always kept in the timed set so pruning can never
+    regress below the no-autotune baseline.
     """
     key = make_key(kind, x_shape, w_shape, stride=stride, dilation=dilation,
                    dtype=dtype, padding=padding, output_padding=output_padding)
@@ -185,6 +204,18 @@ def tune(kind: str, x_shape: tuple, w_shape: tuple, *, stride: int = 1,
         h_out = -(-x_shape[1] // stride)
     if cands is None:
         cands = candidates(h_out, w_shape[3])
+    prune = _prune_default() if prune is None else prune
+    if prune is not None and prune < len(cands):
+        from repro.core.calibrate import CaptureCase, modeled_cycles, tile_scores
+
+        case = CaptureCase(kind, tuple(x_shape), tuple(w_shape),
+                           stride=stride, dilation=dilation)
+        ranked = tile_scores(h_out, w_shape[3], cands, kind=kind,
+                             base_cycles=modeled_cycles(case),
+                             calibration=calibration)
+        keep = {c for _, c in ranked[:prune]}
+        keep.add(DEFAULT_TILES)     # never time fewer than the baseline
+        cands = [c for c in cands if c in keep]
     best, best_t = DEFAULT_TILES, float("inf")
     for th, tc in cands:
         t = _time_candidate(_build_call(kind, x, w, th, tc, stride, dilation,

@@ -3,6 +3,7 @@
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 
@@ -29,3 +30,30 @@ def resolve_interpret(interpret: bool | None) -> bool:
     if interpret is None:
         return default_backend() == "cpu"
     return interpret
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 1) -> float:
+    """Best-of-``iters`` wall time (seconds) of ``fn(*args)``.
+
+    The single timing harness shared by the autotune sweep, the kernel
+    microbenchmarks and the calibration capture, so every timed region obeys
+    the same two rules:
+
+    * the result is materialised via ``jax.block_until_ready`` INSIDE the
+      timed region — jax dispatch is asynchronous, so returning at launch
+      would record launch latency as kernel runtime;
+    * the estimator is the minimum, not the mean: on shared/loaded hosts the
+      distribution has a long right tail of scheduler noise and the minimum
+      is the stable estimator of the actual cost.
+
+    ``warmup`` untimed calls run first (compile + cache effects).
+    """
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        t1 = time.perf_counter()
+        best = min(best, t1 - t0)
+    return best

@@ -46,14 +46,18 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         rec.update(status="skipped", reason=reason)
         return rec
 
-    t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.size
     try:
+        # explicit interval timestamps: t_lower must not fold mesh
+        # construction in, and t_compile must not fold t_lower in — the
+        # old running-subtraction form made both easy to get wrong
+        t0 = time.time()
         lowered, _ = lower_cell(cfg, shape_name, mesh)
-        t_lower = time.time() - t0
+        t1 = time.time()
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t2 = time.time()
+        t_lower, t_compile = t1 - t0, t2 - t1
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()

@@ -60,6 +60,9 @@ class GenRequest:
     admit_tick: int = -1
     done_tick: int = -1
     result: np.ndarray | None = None
+    # calibrated host-time admission estimate (us) for the whole request, or
+    # None when the server has no calibration fitted for this layer mix
+    est_us: float | None = None
 
     @property
     def wait_ticks(self) -> int:
@@ -203,7 +206,8 @@ class GenServer:
                  mesh=None, spatial: bool = False,
                  unet_widths: tuple[int, ...] = UNET_WIDTHS, unet_hw: int = 8,
                  out_ch: int = 3, dcgan_nz: int = 100, dcgan_ngf: int = 64,
-                 params: dict | None = None, param_seed: int = 0):
+                 params: dict | None = None, param_seed: int = 0,
+                 calibration=None):
         self.batch = batch
         self.backend = backend
         self.interpret = interpret
@@ -214,6 +218,7 @@ class GenServer:
         self.dcgan_nz, self.dcgan_ngf = dcgan_nz, dcgan_ngf
         self._params = dict(params or {})
         self._param_seed = param_seed
+        self.calibration = calibration
         self._lanes: dict[str, _DiffusionLane | _DCGANLane] = {}
         self._pending: deque[GenRequest] = deque()
         self._done: dict[int, GenRequest] = {}
@@ -248,6 +253,19 @@ class GenServer:
         return lane
 
     # ---------------------------------------------------------- scheduling --
+    def admission_estimate(self, workload: str, steps: int = 1) -> float | None:
+        """Calibrated host-time estimate (us) for one request: the fitted
+        per-kind cycles->us mapping applied to the workload's canonical layer
+        table x DDIM ``steps``.  None without a calibration, or when the
+        calibration lacks a fitted key for one of the workload's layer kinds
+        on this server's backend — callers must treat that as "no estimate",
+        not zero cost."""
+        if self.calibration is None:
+            return None
+        us = self.calibration.predict_layers(GEN_WORKLOADS[workload](),
+                                             backend=self.backend)
+        return None if us is None else us * max(steps, 1)
+
     def submit(self, workload: str, *, steps: int = 1, seed: int = 0) -> int:
         """Enqueue a request; returns its id.  DCGAN is single-shot
         (``steps`` is forced to 1); diffusion runs a ``steps``-step DDIM
@@ -256,6 +274,7 @@ class GenServer:
         if workload != "unet_dec":
             steps = 1
         req = GenRequest(self._next_rid, workload, steps, seed, self._tick)
+        req.est_us = self.admission_estimate(workload, steps)
         self._next_rid += 1
         self._pending.append(req)
         return req.rid
@@ -353,10 +372,15 @@ def main() -> None:
                     help="tiny widths (CI): 16x16 images, small DCGAN")
     ns = ap.parse_args()
 
+    from repro.core import calibrate as cal
+
     kw: dict = dict(batch=ns.batch, backend=ns.backend)
     if ns.smoke or (ns.backend == "pallas" and jax.default_backend() == "cpu"):
         # interpret-mode pallas needs tiny widths to stay tractable on CPU
         kw.update(unet_widths=(8, 8), unet_hw=4, dcgan_nz=16, dcgan_ngf=4)
+    cache = cal.default_cache_path()
+    if cache.exists():          # host-grounded admission estimates when a
+        kw["calibration"] = cal.Calibration.load(cache)  # table was captured
     server = GenServer(**kw)
     step_list = [int(s) for s in ns.steps.split(",")]
     for i in range(ns.requests):
@@ -373,12 +397,18 @@ def main() -> None:
           f"mean wait {st['mean_wait_ticks']:.1f} ticks "
           f"(max {st['max_wait_ticks']:.0f})")
     rep = cm.serve_report(GEN_WORKLOADS[ns.workload](),
-                          steps=max(step_list))
+                          steps=max(step_list),
+                          calibration=server.calibration,
+                          backend=ns.backend)
     print(f"[serve_gen] cycle model ({ns.workload}, canonical widths, "
           f"{max(step_list)} steps/sample): "
           f"{rep['images_per_s_ours']:.1f} img/s decomposed vs "
           f"{rep['images_per_s_naive']:.1f} naive "
           f"({rep['serve_speedup_vs_naive']:.2f}x)")
+    if "calibrated_us_per_image" in rep:
+        print(f"[serve_gen] calibrated host estimate: "
+              f"{rep['calibrated_us_per_image']:.0f} us/image "
+              f"({rep['calibrated_images_per_s']:.2f} img/s on this host)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,80 @@
+"""Whisper audio frontend on the repo's conv engine (arXiv 2212.04356 §2).
+
+The transformer stack of whisper-small is config-stubbed per the assignment
+(``repro.configs.whisper_small`` — ``input_specs`` supplies precomputed
+frame embeddings), but the real model's two-conv mel frontend is exactly the
+kind of op this repo executes: two 1-D convolutions over time, expressed as
+``(H=1)`` 2-D convolutions through :func:`repro.core.decompose.conv2d`:
+
+    mel (B, T, n_mels)
+      -> conv k=3 s=1 SAME -> gelu        (B, T,    d_model)
+      -> conv k=3 s=2 SAME -> gelu        (B, T/2,  d_model)
+
+Stride-2 output length follows the engine's SAME convention
+(``ceil(T / 2)``), matching Whisper's ``Conv1d(..., stride=2, padding=1)``
+for the canonical even ``T=3000``.  Parity against
+``lax.conv_general_dilated`` is pinned in ``tests/test_whisper_frontend.py``;
+``examples/whisper_frontend_demo.py`` drives it end to end (tier-1 CI runs
+the ``--smoke`` variant).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.decompose import conv2d
+
+#: canonical whisper-small frontend geometry (mel bins, frames, d_model)
+N_MELS, N_FRAMES, D_MODEL = 80, 3000, 768
+
+
+def init_frontend_params(key, n_mels: int = N_MELS, d_model: int = D_MODEL,
+                         dtype=jnp.float32) -> dict:
+    """Fan-in-normal weights for the two temporal convs (no biases — the
+    stub pipeline folds them into the downstream embedding layernorm)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "conv1": (jax.random.normal(k1, (1, 3, n_mels, d_model), jnp.float32)
+                  * (2.0 / (3 * n_mels)) ** 0.5).astype(dtype),
+        "conv2": (jax.random.normal(k2, (1, 3, d_model, d_model), jnp.float32)
+                  * (2.0 / (3 * d_model)) ** 0.5).astype(dtype),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def frontend(params: dict, mel: jax.Array, backend: str = "xla",
+             interpret: bool | None = None) -> jax.Array:
+    """mel (B, T, n_mels) -> frame embeddings (B, ceil(T/2), d_model).
+
+    1-D convs ride the dense engine as ``(B, 1, T, C)`` with ``k=(1, 3)``
+    — the H axis is a degenerate single row, so the row-tiled kernels see a
+    1 x T image and the time axis lands on the lane dimension.
+    """
+    x = mel[:, None]                                 # (B, 1, T, n_mels)
+    kw = dict(backend=backend, interpret=interpret)
+    h = jax.nn.gelu(conv2d(x, params["conv1"], **kw))
+    h = jax.nn.gelu(conv2d(h, params["conv2"], stride=2, **kw))
+    return h[:, 0]                                   # (B, ceil(T/2), d_model)
+
+
+def frontend_reference(params: dict, mel: jax.Array) -> jax.Array:
+    """Same frontend straight through ``lax.conv_general_dilated`` — the
+    parity oracle for :func:`frontend` (no repo engine code on this path).
+
+    Padding is the explicit symmetric ``(1, 1)`` of Whisper's
+    ``Conv1d(..., padding=1)`` — note lax's ``"SAME"`` *string* would pad
+    ``(0, 1)`` at stride 2 (it balances low to hit ``ceil(T/s)`` exactly),
+    which samples the other time phase; same shape, different values."""
+    x = mel[:, None]
+    pads = [(0, 0), (1, 1)]
+    h = jax.lax.conv_general_dilated(
+        x, params["conv1"], window_strides=(1, 1), padding=pads,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    h = jax.nn.gelu(h)
+    h = jax.lax.conv_general_dilated(
+        h, params["conv2"], window_strides=(1, 2), padding=pads,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.gelu(h)[:, 0]

@@ -101,6 +101,38 @@ def test_aot_tune_key_matches_dispatcher_key(cache_dir, monkeypatch):
                         padding=None) == tiles_d
 
 
+def test_prune_times_only_ranked_top_plus_default(cache_dir, monkeypatch):
+    """``prune=k`` times the k model-ranked candidates plus DEFAULT_TILES."""
+    timed = []
+
+    def fake_time(call, iters):
+        timed.append(1)
+        return float(len(timed))
+
+    monkeypatch.setattr(at, "_time_candidate", fake_time)
+    cands = [(4, 64), (8, 64), (8, 128)]
+    at.tune("dense", (1, 16, 16, 4), (3, 3, 4, 8), cands=cands, prune=1,
+            iters=1)
+    # top-1 by tile score is (8, 64); DEFAULT_TILES (8, 128) always rides
+    assert len(timed) == 2
+
+
+def test_prune_env_var_caps_the_sweep(cache_dir, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_PRUNE", "1")
+    timed = []
+    monkeypatch.setattr(at, "_time_candidate",
+                        lambda call, iters: timed.append(1) or float(len(timed)))
+    at.tune("dense", (1, 16, 16, 4), (3, 3, 4, 8),
+            cands=[(4, 64), (8, 64), (8, 128)], iters=1)
+    assert len(timed) == 2
+    # garbage value: pruning silently off, the full grid is timed
+    monkeypatch.setenv("REPRO_AUTOTUNE_PRUNE", "nope")
+    timed.clear()
+    at.tune("dense", (1, 16, 16, 4), (3, 3, 4, 8),
+            cands=[(4, 64), (8, 64), (8, 128)], iters=1)
+    assert len(timed) == 3
+
+
 def test_corrupt_cache_file_is_ignored(cache_dir):
     path = at.cache_path()
     path.parent.mkdir(parents=True, exist_ok=True)

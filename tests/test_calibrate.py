@@ -1,0 +1,267 @@
+"""Calibration layer + perf gate (DESIGN.md §10).
+
+Covers the closed-form fit (round-trip on synthetic data, degenerate-case
+clamping), the prediction-error report schema the bench JSON carries, the
+calibrated consumers (tile scoring, serving admission estimates, calibrated
+``serve_report`` keys), and the drift gate itself — it must fail on a
+doctored baseline and pass on identical data.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import perf_gate as pg
+from repro.core import calibrate as cal
+from repro.core import cycle_model as cm
+
+
+# ------------------------------------------------------------------ fitting --
+
+def _samples(a=0.5, b=10.0, kind="dense", backend="xla", dev="testdev",
+             cycles=(1e3, 5e3, 2e4, 1e5)):
+    return [cal.Sample(kind, backend, dev, f"s{i}", c, a * c + b)
+            for i, c in enumerate(cycles)]
+
+
+def test_fit_round_trips_synthetic_affine():
+    calib = cal.Calibration.fit(_samples(a=0.5, b=10.0))
+    co = calib.coeffs[cal.key_of("dense", "xla", "testdev")]
+    assert co.a_us_per_cycle == pytest.approx(0.5)
+    assert co.b_us == pytest.approx(10.0)
+    assert co.n == 4
+    assert calib.predict("dense", 2e4, backend="xla",
+                         device_kind="testdev") == pytest.approx(1.001e4)
+
+
+def test_fit_single_sample_is_origin_slope():
+    calib = cal.Calibration.fit(_samples(a=2.0, b=0.0, cycles=(1e4,)))
+    co = calib.coeffs[cal.key_of("dense", "xla", "testdev")]
+    assert co.a_us_per_cycle == pytest.approx(2.0)
+    assert co.b_us == 0.0 and co.n == 1
+
+
+def test_fit_clamps_negative_intercept():
+    # noisy tiny-op data that LS would fit with b < 0: refit through origin
+    ss = [cal.Sample("dense", "xla", "d", "a", 10.0, 1.0),
+          cal.Sample("dense", "xla", "d", "b", 20.0, 30.0)]
+    co = cal.Calibration.fit(ss).coeffs[cal.key_of("dense", "xla", "d")]
+    assert co.b_us == 0.0 and co.a_us_per_cycle >= 0.0
+
+
+def test_fit_zero_samples_raises():
+    with pytest.raises(ValueError):
+        cal._fit_one([])
+
+
+def test_key_of_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        cal.key_of("conv3d", "xla", "d")
+
+
+def test_save_load_round_trip(tmp_path):
+    calib = cal.Calibration.fit(_samples())
+    p = tmp_path / "cal.json"
+    calib.save(p)
+    loaded = cal.Calibration.load(p)
+    assert loaded.to_payload() == calib.to_payload()
+
+
+# ------------------------------------------------------------ error report --
+
+def test_error_report_schema_and_perfect_fit():
+    ss = _samples(a=1e-3, b=2.0)
+    rep = cal.Calibration.fit(ss).error_report(ss)
+    key = cal.key_of("dense", "xla", "testdev")
+    assert set(rep) == {key}
+    e = rep[key]
+    assert set(e) >= {"a_us_per_cycle", "b_us", "n", "samples",
+                      "mape_pct", "max_abs_err_pct"}
+    assert len(e["samples"]) == len(ss)
+    assert set(e["samples"][0]) == {"name", "cycles", "us", "pred_us",
+                                    "err_pct"}
+    # exact affine data: the fit reproduces every sample
+    assert e["mape_pct"] == pytest.approx(0.0, abs=0.01)
+
+
+def test_error_report_skips_unfitted_keys():
+    calib = cal.Calibration.fit(_samples(kind="dense"))
+    rep = calib.error_report(_samples(kind="tconv"))
+    assert rep == {}
+
+
+# --------------------------------------------------------------- consumers --
+
+def _full_calibration(a=1e-3, b=5.0, backend="xla"):
+    """Coeffs for every engine kind on THIS host's device key."""
+    return cal.Calibration({cal.key_of(k, backend): cal.Coeffs(a, b, 3)
+                            for k in cal.KINDS})
+
+
+def test_predict_layers_sums_and_gates_on_coverage():
+    from repro.core.gen_spec import dcgan_layers
+
+    layers = dcgan_layers(64)
+    calib = _full_calibration(a=1e-3, b=5.0)
+    us = calib.predict_layers(layers, backend="xla")
+    expect = sum(1e-3 * cm.cycles_our_decomposed(l) + 5.0 for l in layers)
+    assert us == pytest.approx(expect)
+    # a partially-fitted calibration must refuse, not undercount
+    partial = cal.Calibration(
+        {cal.key_of("dense", "xla"): cal.Coeffs(1e-3, 5.0, 3)})
+    assert partial.predict_layers(layers, backend="xla") is None
+
+
+def test_serve_report_calibrated_keys():
+    from repro.core.gen_spec import dcgan_layers
+
+    layers = dcgan_layers(64)
+    calib = _full_calibration()
+    rep = cm.serve_report(layers, steps=4, calibration=calib)
+    assert rep["calibrated_us_per_image"] == pytest.approx(
+        4 * calib.predict_layers(layers, backend="xla"))
+    assert rep["calibrated_images_per_s"] > 0
+    assert "calibrated_us_per_image" not in cm.serve_report(layers, steps=4)
+
+
+def test_gen_server_admission_estimate():
+    from repro.launch.serve_gen import GenServer
+
+    srv = GenServer(batch=1, backend="xla", calibration=_full_calibration())
+    est = srv.admission_estimate("dcgan64", 1)
+    assert est is not None and est > 0
+    assert srv.admission_estimate("unet_dec", 5) == pytest.approx(
+        5 * srv.admission_estimate("unet_dec", 1))
+    # no calibration / partial calibration: no estimate rather than zero cost
+    assert GenServer(batch=1).admission_estimate("dcgan64") is None
+
+
+def test_tile_scores_prefers_coverage_and_weights_overhead():
+    cands = [(4, 64), (8, 64), (8, 128)]
+    ranked = cal.tile_scores(16, 8, cands)
+    # same padded fraction for tc=64 at cout=8; fewer grid cells wins
+    assert ranked[0][1] == (8, 64)
+    assert [c for _, c in ranked] == [(8, 64), (4, 64), (8, 128)]
+    # h_out=20: th=4 covers exactly (5 cells), th=8 pads 20->24 (3 cells).
+    # with the default tiny cell weight the exact-cover tile wins ...
+    cands = [(4, 64), (8, 64)]
+    assert cal.tile_scores(20, 8, cands)[0][1] == (4, 64)
+    # ... but on a dispatch-dominated host (huge fitted b_us relative to the
+    # modeled compute time) the calibrated score flips to fewest cells
+    heavy = cal.Calibration(
+        {cal.key_of("dense", "xla"): cal.Coeffs(1e-6, 1e6, 3)})
+    ranked = cal.tile_scores(20, 8, cands, kind="dense", backend="xla",
+                             base_cycles=1e4, calibration=heavy)
+    assert ranked[0][1] == (8, 64)
+
+
+def test_capture_case_layer_round_trip():
+    case = cal.CaptureCase("tconv", (1, 16, 16, 8), (3, 3, 8, 8), stride=2)
+    l = cal.layer_of(case)
+    assert l.kind == "transposed" and (l.h_out, l.w_out) == (32, 32)
+    assert cal.modeled_cycles(case) == cm.cycles_our_decomposed(l)
+    dense = cal.CaptureCase("dense", (2, 16, 16, 8), (3, 3, 8, 8), stride=2)
+    ld = cal.layer_of(dense)
+    assert (ld.h_out, ld.w_out) == (8, 8)
+    assert cal.modeled_cycles(dense) == 2 * cm.cycles_our_decomposed(ld)
+
+
+# ---------------------------------------------------------------- perf gate --
+
+def _bench_payload(model_val=2.5, ratio=0.9, slope=1e-3, mape=5.0):
+    return {
+        "rev": "abc", "backend": "cpu", "device_kind": "cpu",
+        "rows": [
+            {"name": "fig12.L128.speedup_x", "us_per_call": 1.0,
+             "derived": f"{model_val}"},
+            {"name": "kern.dilated_D3.naive", "us_per_call": 10.0,
+             "derived": ""},   # wall row without a derived number: untracked
+        ],
+        "ratios": {"fused_unfused": {"kern.epilogue_dense.fused": ratio}},
+        "calibration": {
+            "fit": {"schema": 1, "coeffs": {
+                "dense/xla/cpu": {"a_us_per_cycle": slope, "b_us": 1.0,
+                                  "n": 3}}},
+            "errors": {"dense/xla/cpu": {"mape_pct": mape}},
+        },
+    }
+
+
+def test_gate_passes_on_identical_payloads():
+    p = _bench_payload()
+    violations, _ = pg.compare(p, _bench_payload())
+    assert violations == []
+
+
+def test_gate_fails_on_model_drift():
+    violations, _ = pg.compare(_bench_payload(model_val=2.6),
+                               _bench_payload(model_val=2.5))
+    assert any("fig12.L128.speedup_x" in v for v in violations)
+    # within the 1% band: no violation
+    violations, _ = pg.compare(_bench_payload(model_val=2.51),
+                               _bench_payload(model_val=2.5))
+    assert violations == []
+
+
+def test_gate_fails_on_vanished_entry():
+    cur = _bench_payload()
+    cur["rows"] = []
+    violations, _ = pg.compare(cur, _bench_payload())
+    assert any("missing from current" in v for v in violations)
+
+
+def test_gate_ratio_tolerance_is_loose():
+    violations, _ = pg.compare(_bench_payload(ratio=1.4),
+                               _bench_payload(ratio=0.9))
+    assert violations == []     # 56% drift < 75% tol: wall noise tolerated
+    violations, _ = pg.compare(_bench_payload(ratio=9.0),
+                               _bench_payload(ratio=0.9))
+    assert any("[ratio]" in v for v in violations)
+
+
+def test_gate_mape_growth_is_one_sided():
+    violations, _ = pg.compare(_bench_payload(mape=25.0),
+                               _bench_payload(mape=5.0))
+    assert any("[calib_mape]" in v for v in violations)
+    # improvement never fails
+    violations, _ = pg.compare(_bench_payload(mape=0.5),
+                               _bench_payload(mape=5.0))
+    assert violations == []
+
+
+def test_gate_skips_wall_families_across_hosts():
+    cur = _bench_payload(ratio=9.0, mape=90.0, slope=1.0)
+    cur["device_kind"] = "TPU v4"
+    violations, notes = pg.compare(cur, _bench_payload())
+    assert violations == []     # model family alone applies cross-host
+    assert any("skipped" in n for n in notes)
+
+
+def test_gate_main_exit_codes(tmp_path, monkeypatch, capsys):
+    cur = tmp_path / "BENCH_cur.json"
+    base = tmp_path / "base.json"
+    cur.write_text(json.dumps(_bench_payload()))
+    base.write_text(json.dumps(_bench_payload()))
+    args = ["--current", str(cur), "--baseline", str(base)]
+    assert pg.main(args) == 0
+    # doctored baseline: the gate must catch it
+    base.write_text(json.dumps(_bench_payload(model_val=99.0)))
+    assert pg.main(args) == 1
+    # no baseline committed yet: bootstrap pass
+    assert pg.main(["--current", str(cur),
+                    "--baseline", str(tmp_path / "nope.json")]) == 0
+    # no current bench anywhere: distinct error code
+    monkeypatch.chdir(tmp_path / "..")
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    monkeypatch.chdir(empty)
+    assert pg.main(["--baseline", str(base)]) == 2
+    capsys.readouterr()
+
+
+def test_gate_extract_covers_all_families():
+    e = pg.extract(_bench_payload())
+    assert e["model"] == {"fig12.L128.speedup_x": 2.5}
+    assert e["ratio"] == {"fused_unfused/kern.epilogue_dense.fused": 0.9}
+    assert e["calib_slope"] == {"dense/xla/cpu": 1e-3}
+    assert e["calib_mape"] == {"dense/xla/cpu": 5.0}

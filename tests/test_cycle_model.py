@@ -219,3 +219,69 @@ def test_report_handles_missing_groups():
     assert rep["dilated_speedup"] == 1.0          # absent group: neutral
     assert rep["share_dilated_pct"] == 0.0
     assert rep["transposed_speedup"] > 2.0
+
+
+# ------------------------------------------- empty-workload report guards ---
+# Regression: report/training_report/serve_report on an empty (or otherwise
+# zero-cycle) layer list raised ZeroDivisionError instead of returning the
+# neutral report — callers costing a filtered layer subset hit this.
+
+def test_report_empty_layers_is_neutral():
+    rep = cm.report([])
+    assert rep["overall_speedup"] == 1.0
+    assert rep["dilated_speedup"] == 1.0
+    assert rep["share_dilated_pct"] == 0.0
+    assert rep["peak_gops"] == pytest.approx(168.0)   # array property survives
+
+
+def test_training_report_empty_layers_is_neutral():
+    trn = cm.training_report([])
+    assert trn["train_speedup_vs_naive"] == 1.0
+    assert trn["fwd_cycles"] == 0.0
+
+
+def test_serve_report_empty_layers_is_neutral():
+    rep = cm.serve_report([], steps=8)
+    assert rep["serve_speedup_vs_naive"] == 1.0
+    assert rep["cycles_per_image_ours"] == 0.0
+    assert rep["images_per_s_ours"] == 0.0
+
+
+# --------------------------------------- wgrad tap-gather port contention ---
+# The backward weight pass gathers taps along the contraction (spatial)
+# axis, so dL/dw packs kernel-tap columns instead of output rows: the
+# cycle model charges the pack-quantization of those columns rather than
+# assuming the forward pass's full-rate port utilization.
+
+def test_wgrad_contention_bounds_and_exact_values():
+    from repro.core.enet_spec import ConvLayer
+
+    # k=3 transposed: 9 taps pack 3-per-port exactly; cout=16 tiles 8-wide
+    t3 = ConvLayer("t", "transposed", 128, 128, 16, 16, 3, 3, stride=2,
+                   group="transposed")
+    assert cm.wgrad_contention(t3) == pytest.approx(1.0)
+    # k=4 (DCGAN): 16 taps -> ceil to 18 slots = 1.125x
+    t4 = ConvLayer("t", "transposed", 8, 8, 16, 16, 4, 4, stride=2,
+                   group="transposed", output_padding=0, padding=2)
+    assert cm.wgrad_contention(t4) == pytest.approx(18 / 16)
+    # k=2 (U-Net upsample): 4 taps -> 6 slots = 1.5x
+    t2 = ConvLayer("t", "transposed", 16, 16, 16, 16, 2, 2, stride=2,
+                   group="transposed", output_padding=0, padding=1)
+    assert cm.wgrad_contention(t2) == pytest.approx(1.5)
+    # dense k=3 cin=16: column 48 packs exactly; cout=16 tiles exactly
+    d = ConvLayer("d", "conv", 64, 64, 16, 16, 3, 3)
+    assert cm.wgrad_contention(d) == pytest.approx(1.0)
+    # never below full rate, and cycles_wgrad carries the term
+    for l in (t3, t4, t2, d):
+        assert cm.wgrad_contention(l) >= 1.0
+        assert cm.cycles_wgrad(l) == pytest.approx(
+            cm.ideal_sparse_macs(l) / cm.MACS_PER_CYCLE
+            * cm.wgrad_contention(l))
+
+
+def test_wgrad_contention_ragged_cout_tiling():
+    from repro.core.enet_spec import ConvLayer
+
+    # cout=12 on an 8-wide block row: 16/12 tiling waste enters wgrad
+    l = ConvLayer("d", "conv", 32, 32, 16, 12, 3, 3)
+    assert cm.wgrad_contention(l) == pytest.approx(16 / 12)
