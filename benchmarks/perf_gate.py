@@ -16,6 +16,11 @@ Three entry families, with per-family tolerances (all relative):
   ``tuned_default``).  Wall noise on shared CI hosts is real; default
   tolerance is loose (75% relative), catching order-of-magnitude rot, not
   jitter.
+* **serve** — the measured serving-latency section (``serve_latency``):
+  p50/p99 request latency and host dispatches per image of the
+  ``serve.*`` drains.  Wall-derived, so gated at the same loose tolerance
+  class as **ratio** (``--serve-tol``) and skipped across
+  ``(backend, device kind)`` changes.
 * **calibration** — the calibrated prediction-error report: per
   ``(kind, backend, device kind)`` key, the MAPE may not grow by more than
   ``--mape-slack`` percentage points over baseline (a growing MAPE means
@@ -68,7 +73,8 @@ def _model_number(derived: str) -> float | None:
 def extract(payload: dict) -> dict[str, dict[str, float]]:
     """Flatten a bench JSON into gate-comparable ``family -> name -> value``."""
     out: dict[str, dict[str, float]] = {
-        "model": {}, "ratio": {}, "calib_slope": {}, "calib_mape": {},
+        "model": {}, "ratio": {}, "serve": {}, "calib_slope": {},
+        "calib_mape": {},
     }
     for row in payload.get("rows", []):
         name = row.get("name", "")
@@ -79,6 +85,9 @@ def extract(payload: dict) -> dict[str, dict[str, float]]:
     for family, table in payload.get("ratios", {}).items():
         for name, val in table.items():
             out["ratio"][f"{family}/{name}"] = float(val)
+    for row, metrics in payload.get("serve_latency", {}).items():
+        for key, val in metrics.items():
+            out["serve"][f"{row}/{key}"] = float(val)
     calib = payload.get("calibration", {})
     for key, co in calib.get("fit", {}).get("coeffs", {}).items():
         out["calib_slope"][key] = float(co.get("a_us_per_cycle", 0.0))
@@ -93,7 +102,8 @@ def _same_host(cur: dict, base: dict) -> bool:
 
 
 def compare(cur: dict, base: dict, *, model_tol: float = 0.01,
-            ratio_tol: float = 0.75, calib_tol: float = 1.0,
+            ratio_tol: float = 0.75, serve_tol: float = 0.75,
+            calib_tol: float = 1.0,
             mape_slack: float = 10.0) -> tuple[list[str], list[str]]:
     """Gate the current payload against the baseline.
 
@@ -133,6 +143,7 @@ def compare(cur: dict, base: dict, *, model_tol: float = 0.01,
     rel_gate("model", model_tol)
     if wall_ok:
         rel_gate("ratio", ratio_tol)
+        rel_gate("serve", serve_tol)
         rel_gate("calib_slope", calib_tol)
         for key, bmape in sorted(base_e["calib_mape"].items()):
             cmape = cur_e["calib_mape"].get(key)
@@ -158,6 +169,7 @@ def main(argv: list[str] | None = None) -> int:
                     default="benchmarks/baselines/bench_smoke_baseline.json")
     ap.add_argument("--model-tol", type=float, default=0.01)
     ap.add_argument("--ratio-tol", type=float, default=0.75)
+    ap.add_argument("--serve-tol", type=float, default=0.75)
     ap.add_argument("--calib-tol", type=float, default=1.0)
     ap.add_argument("--mape-slack", type=float, default=10.0)
     ns = ap.parse_args(argv)
@@ -174,7 +186,8 @@ def main(argv: list[str] | None = None) -> int:
     cur, base = load(current), load(ns.baseline)
     violations, notes = compare(
         cur, base, model_tol=ns.model_tol, ratio_tol=ns.ratio_tol,
-        calib_tol=ns.calib_tol, mape_slack=ns.mape_slack)
+        serve_tol=ns.serve_tol, calib_tol=ns.calib_tol,
+        mape_slack=ns.mape_slack)
     print(f"perf-gate: {current} vs {ns.baseline} "
           f"(baseline rev {base.get('rev', '?')})")
     for n in notes:

@@ -45,6 +45,28 @@ def _ratios(rows: list[tuple]) -> dict:
     return out
 
 
+#: derived keys of the measured ``serve.*`` rows that form the serving
+#: latency trajectory (``perf_gate.py`` gates them at wall-ratio tolerance)
+_SERVE_KEYS = ("p50_us", "p99_us", "dispatches_per_image")
+
+
+def _serve_latency(rows: list[tuple]) -> dict:
+    """Latency-percentile section: p50/p99 and dispatch amortisation of the
+    measured serving drains, keyed ``serve.<row>`` -> metric."""
+    out: dict[str, dict[str, float]] = {}
+    for name, _, derived in rows:
+        if not name.startswith("serve."):
+            continue
+        for part in str(derived).split(","):
+            k, _, v = part.partition("=")
+            if k in _SERVE_KEYS:
+                try:
+                    out.setdefault(name, {})[k] = float(v)
+                except ValueError:
+                    continue
+    return out
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--emit-json", action="store_true",
@@ -93,6 +115,9 @@ def main(argv: list[str] | None = None) -> None:
             "rows": [{"name": n, "us_per_call": round(u, 1), "derived": d}
                      for n, u, d in all_rows],
             "ratios": _ratios(all_rows),
+            # measured serving p50/p99 + dispatches/image (DESIGN.md §9) —
+            # gated by perf_gate.py like the wall-ratio families
+            "serve_latency": _serve_latency(all_rows),
             # calibrated cycles->us fit + prediction-error report per
             # (engine kind, backend, device kind) — the trajectory the
             # perf gate tracks (DESIGN.md §10)

@@ -5,10 +5,16 @@ Two row families, both riding ``BENCH_<rev>.json`` via ``benchmarks/run.py``:
 
 * ``serve.<workload>`` — a real :class:`repro.launch.serve_gen.GenServer`
   drain on this host: N >= 4 concurrent requests with *mixed* step budgets
-  through the fixed-size batched DDIM loop (plus a single-shot DCGAN
-  batch).  Wall-time per device step; images/s and queue stats in the
-  derived column.  Demo widths — the point is the serving-path plumbing and
-  its trajectory over revisions, not peak FLOPs.
+  through the batched DDIM loop with ``SCAN_STEPS`` DDIM steps fused per
+  dispatch, plus the same request set at K=1 (``serve.unet_dec_k1``) —
+  the fused drain is asserted to take strictly fewer host dispatches per
+  image at equal step budgets — plus a single-shot DCGAN batch.
+  Wall-time per device dispatch; images/s, p50/p99 request latency and
+  dispatches/image in the derived column (collected into the
+  ``serve_latency`` section of ``BENCH_<rev>.json`` and gated by
+  ``perf_gate.py`` at wall-ratio tolerance).  Demo widths — the point is
+  the serving-path plumbing and its trajectory over revisions, not peak
+  FLOPs.
 * ``serve_model.<workload>`` — :func:`repro.core.cycle_model.serve_report`
   at canonical widths: images/s on the paper's 168-MAC array, decomposed vs
   the naive zero-laden schedule.  The decomposed-vs-naive throughput ratio
@@ -33,6 +39,11 @@ from repro.core.gen_spec import GEN_WORKLOADS
 #: sample (a typical few-dozen-step DDIM schedule); GANs are single-shot.
 MODEL_STEPS = {"dcgan64": 1, "dcgan128": 1, "unet_dec": 25}
 
+#: DDIM steps fused per dispatch in the measured ``serve.unet_dec`` drain
+#: (the K of ``make_gen_scan_step``); ``serve.unet_dec_k1`` is the same
+#: request set unfused, so the dispatch amortisation is visible per rev.
+SCAN_STEPS = 4
+
 
 def _measured_rows(rows: list, smoke: bool) -> None:
     from repro.launch.serve_gen import GenServer
@@ -44,22 +55,44 @@ def _measured_rows(rows: list, smoke: bool) -> None:
         widths, hw, n_req, steps = (16, 8, 8), 4, 8, (8, 5, 3, 6)
         nz, ngf = 32, 8
 
-    # mixed-step diffusion drain through the batched loop
-    server = GenServer(batch=4, unet_widths=widths, unet_hw=hw,
-                       dcgan_nz=nz, dcgan_ngf=ngf)
-    for i in range(n_req):
-        server.submit("unet_dec", steps=steps[i % len(steps)], seed=i)
-    t0 = time.perf_counter()
-    images = server.run()
-    wall = time.perf_counter() - t0
-    st = server.stats()
-    assert len(images) == n_req, (len(images), n_req)
+    def _drain(scan_steps: int):
+        """Mixed-step diffusion drain through the batched K-step loop."""
+        server = GenServer(batch=4, unet_widths=widths, unet_hw=hw,
+                           dcgan_nz=nz, dcgan_ngf=ngf, scan_steps=scan_steps)
+        for i in range(n_req):
+            server.submit("unet_dec", steps=steps[i % len(steps)], seed=i)
+        t0 = time.perf_counter()
+        images = server.run()
+        wall = time.perf_counter() - t0
+        st = server.stats()
+        assert len(images) == n_req, (len(images), n_req)
+        return server, wall, st
+
+    server, wall, st = _drain(SCAN_STEPS)
+    _, wall1, st1 = _drain(1)
+    # acceptance bar of the fused-sampling issue: at equal step budgets the
+    # K-step scan takes strictly fewer host dispatches per image
+    assert st["device_steps"] < st1["device_steps"], (
+        st["device_steps"], st1["device_steps"])
+
+    def _lat(st_: dict) -> str:
+        return (f"p50_us={st_['latency_p50_s'] * 1e6:.0f},"
+                f"p99_us={st_['latency_p99_s'] * 1e6:.0f}")
+
     rows.append((
         "serve.unet_dec",
         wall / max(st["device_steps"], 1) * 1e6,
-        f"imgs_per_s={st['images_per_s']:.2f},reqs={n_req},"
+        f"imgs_per_s={st['images_per_s']:.2f},"
+        f"warm_imgs_per_s={st['warm_images_per_s']:.2f},reqs={n_req},"
         f"mixed_steps={'/'.join(map(str, steps))},"
-        f"ticks={st['ticks']:.0f},mean_wait={st['mean_wait_ticks']:.1f}"))
+        f"ticks={st['ticks']:.0f},mean_wait={st['mean_wait_ticks']:.1f},"
+        f"scan_steps={SCAN_STEPS},"
+        f"dispatches_per_image={st['device_steps'] / n_req:.2f},{_lat(st)}"))
+    rows.append((
+        "serve.unet_dec_k1",
+        wall1 / max(st1["device_steps"], 1) * 1e6,
+        f"imgs_per_s={st1['images_per_s']:.2f},reqs={n_req},"
+        f"dispatches_per_image={st1['device_steps'] / n_req:.2f},{_lat(st1)}"))
 
     # single-shot GAN batch through the same scheduler (run() returns all
     # completed requests cumulatively, so check the new rids specifically)
@@ -68,8 +101,11 @@ def _measured_rows(rows: list, smoke: bool) -> None:
     images = server.run()
     wall = time.perf_counter() - t0
     assert all(images[r] is not None for r in rids)
+    lats = sorted(server.request(r).latency_s for r in rids)
     rows.append(("serve.dcgan64", wall / n_req * 1e6,
-                 f"imgs_per_s={n_req / wall:.2f},reqs={n_req}"))
+                 f"imgs_per_s={n_req / wall:.2f},reqs={n_req},"
+                 f"p50_us={cm.np_percentile(lats, 50.0) * 1e6:.0f},"
+                 f"p99_us={cm.np_percentile(lats, 99.0) * 1e6:.0f}"))
 
 
 def _model_rows(rows: list) -> None:
@@ -79,7 +115,9 @@ def _model_rows(rows: list) -> None:
         t0 = time.perf_counter()
         layers = fn()
         steps = MODEL_STEPS[name]
-        srv = cm.serve_report(layers, steps=steps)
+        scan = SCAN_STEPS if name == "unet_dec" else 1
+        srv = cm.serve_report(layers, steps=steps, scan_steps=scan,
+                              steps_list=[steps] * 4)
         base = cm.report(layers)
         ratio = srv["serve_speedup_vs_naive"] / base["speedup_vs_naive"]
         # acceptance bar: serving throughput ratio consistent with the
@@ -91,7 +129,10 @@ def _model_rows(rows: list) -> None:
             f"imgs_per_s={srv['images_per_s_ours']:.1f},"
             f"naive_imgs_per_s={srv['images_per_s_naive']:.1f},"
             f"serve_speedup={srv['serve_speedup_vs_naive']:.2f}x,"
-            f"steps={steps},latency_ms={srv['latency_ms_ours']:.1f}"))
+            f"steps={steps},latency_ms={srv['latency_ms_ours']:.1f},"
+            f"dispatches_per_image={srv['dispatches_per_image']:.0f},"
+            f"model_p50_ms={srv['latency_p50_ms']:.1f},"
+            f"model_p99_ms={srv['latency_p99_ms']:.1f}"))
 
 
 def run(csv: bool = False, smoke: bool = False) -> list[tuple]:

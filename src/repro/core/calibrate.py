@@ -150,15 +150,33 @@ class Calibration:
         layer's kind has no fitted coefficients — a partial estimate would
         silently undercount.
         """
-        total = 0.0
+        split = self.predict_layers_split(layers, backend=backend,
+                                          device_kind=device_kind)
+        return None if split is None else split[0] + split[1]
+
+    def predict_layers_split(self, layers: list[ConvLayer], *,
+                             backend: str = "xla",
+                             device_kind: str | None = None
+                             ) -> tuple[float, float] | None:
+        """``(compute_us, dispatch_us)`` for one pass over a layer table.
+
+        ``compute_us`` is the fitted-slope part (``a * cycles`` per layer) —
+        it scales with every pass; ``dispatch_us`` is the summed per-layer
+        fixed overhead (``b_us`` per engine dispatch) — a ``K``-step fused
+        scan pays it once per *dispatch*, not once per step, which is what
+        ``cycle_model.serve_report(scan_steps=...)`` amortises.  Same
+        coverage gate as :meth:`predict_layers`: ``None`` when any layer's
+        kind has no fitted coefficients.
+        """
+        compute = dispatch = 0.0
         for l in layers:
-            us = self.predict(KIND_OF_LAYER[l.kind],
-                              cm.cycles_our_decomposed(l),
-                              backend=backend, device_kind=device_kind)
-            if us is None:
+            co = self.coeffs.get(key_of(KIND_OF_LAYER[l.kind], backend,
+                                        device_kind))
+            if co is None:
                 return None
-            total += us
-        return total
+            compute += co.a_us_per_cycle * cm.cycles_our_decomposed(l)
+            dispatch += co.b_us
+        return compute, dispatch
 
     # ------------------------------------------------------ error reports --
     def error_report(self, samples: list[Sample]) -> dict[str, dict]:

@@ -312,7 +312,8 @@ def report(layers: list[ConvLayer]) -> dict[str, float]:
 
 
 def serve_report(layers: list[ConvLayer], *, steps: int = 1,
-                 batch: int = 1, calibration=None,
+                 batch: int = 1, scan_steps: int = 1,
+                 steps_list: list[int] | None = None, calibration=None,
                  backend: str = "xla") -> dict[str, float]:
     """Steady-state serving cost of an iterative sampler on the array.
 
@@ -327,14 +328,29 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
     per-pass ``report()['speedup_vs_naive']`` exactly; ``benchmarks/
     serve_bench.py`` and ``tests/test_serve_gen.py`` pin that consistency.
 
+    ``scan_steps`` is the fused-dispatch depth ``K`` of the serving loop
+    (``launch.steps.make_gen_scan_step``): the array cycles are unchanged
+    (the same MACs stream either way), but the *host* pays one dispatch per
+    ``ceil(steps / K)`` instead of one per step — reported as
+    ``dispatches_per_image`` and amortised into the calibrated keys.
+
     ``calibration`` (a :class:`repro.core.calibrate.Calibration`) adds
     host-grounded keys next to the 500 MHz array numbers:
     ``calibrated_us_per_image`` / ``calibrated_images_per_s`` predict THIS
-    host's wall time for one decomposed pass x ``steps`` on ``backend``
-    (omitted when the calibration lacks a fitted key for some layer kind).
+    host's wall time on ``backend`` as ``steps x compute + dispatches x
+    per-pass dispatch overhead`` (``Calibration.predict_layers_split``);
+    omitted when the calibration lacks a fitted key for some layer kind.
+
+    ``steps_list`` (a mixed per-request step-budget set) adds the
+    latency-percentile keys ``latency_p50_ms`` / ``latency_p99_ms`` from
+    :func:`serve_percentiles` — the deterministic continuous-batching drain
+    model of DESIGN.md §9.
     """
-    if steps < 1 or batch < 1:
-        raise ValueError(f"steps/batch must be >= 1, got {steps}/{batch}")
+    if steps < 1 or batch < 1 or scan_steps < 1:
+        raise ValueError(
+            f"steps/batch/scan_steps must be >= 1, got "
+            f"{steps}/{batch}/{scan_steps}")
+    dispatches = float(_ceil(steps, scan_steps))
     base = report(layers)
     ours = base["our_cycles"] * steps
     naive = base["naive_cycles"] * steps
@@ -343,6 +359,8 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
         # workload): zero cost, neutral ratio — not a ZeroDivisionError
         return {
             "steps": float(steps), "batch": float(batch),
+            "scan_steps": float(scan_steps),
+            "dispatches_per_image": dispatches,
             "cycles_per_image_ours": 0.0, "cycles_per_image_naive": 0.0,
             "latency_ms_ours": 0.0, "latency_ms_naive": 0.0,
             "images_per_s_ours": 0.0, "images_per_s_naive": 0.0,
@@ -351,6 +369,8 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
     out = {
         "steps": float(steps),
         "batch": float(batch),
+        "scan_steps": float(scan_steps),
+        "dispatches_per_image": dispatches,
         "cycles_per_image_ours": ours,
         "cycles_per_image_naive": naive,
         "latency_ms_ours": 1e3 * batch * ours / FREQ_HZ,
@@ -360,12 +380,101 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
         "serve_speedup_vs_naive": naive / ours,
     }
     if calibration is not None:
-        us = calibration.predict_layers(layers, backend=backend)
-        if us is not None:
-            out["calibrated_us_per_image"] = us * steps
-            out["calibrated_images_per_s"] = (
-                1e6 / (us * steps) if us else 0.0)
+        split = calibration.predict_layers_split(layers, backend=backend)
+        if split is not None:
+            compute_us, dispatch_us = split
+            us = steps * compute_us + dispatches * dispatch_us
+            out["calibrated_us_per_image"] = us
+            out["calibrated_images_per_s"] = 1e6 / us if us else 0.0
+    if steps_list:
+        pct = serve_percentiles(layers, steps_list, batch=batch,
+                                scan_steps=scan_steps,
+                                calibration=calibration, backend=backend)
+        out["latency_p50_ms"] = pct["latency_p50_ms"]
+        out["latency_p99_ms"] = pct["latency_p99_ms"]
     return out
+
+
+def serve_percentiles(layers: list[ConvLayer], steps_list: list[int], *,
+                      batch: int = 1, scan_steps: int = 1, calibration=None,
+                      backend: str = "xla",
+                      pcts: tuple[float, ...] = (50.0, 99.0)
+                      ) -> dict[str, float]:
+    """Latency percentiles of a mixed-step request drain (DESIGN.md §9).
+
+    The serving loop is deterministic given the request set, so the
+    percentile model *is* the schedule: ``len(steps_list)`` requests are all
+    present at t=0, admitted FIFO into ``batch`` slots, and every scheduler
+    tick advances each occupied slot by up to ``scan_steps`` trajectory
+    steps in one fused dispatch.  A dispatch streams ``batch x scan_steps``
+    full passes over the layer table through the array (padded substeps and
+    idle slots stream too — the compiled step's shape does not shrink), so
+    every tick costs the same ``batch * scan_steps * pass_cycles``.  A
+    request's latency is its completion tick's end time; percentiles are
+    taken over the request set (numpy linear interpolation).
+
+    With a ``calibration``, tick wall time is modeled as ``batch x
+    scan_steps x compute_us + dispatch_us`` (one fused dispatch pays the
+    per-pass dispatch overhead once) and calibrated-us percentile keys ride
+    along.
+    """
+    if batch < 1 or scan_steps < 1:
+        raise ValueError(
+            f"batch/scan_steps must be >= 1, got {batch}/{scan_steps}")
+    if not steps_list or min(steps_list) < 1:
+        raise ValueError(f"steps_list must be non-empty positive budgets, "
+                         f"got {steps_list}")
+    pass_cycles = float(sum(cycles_our_decomposed(l) for l in layers))
+    tick_cycles = batch * scan_steps * pass_cycles
+    split = (calibration.predict_layers_split(layers, backend=backend)
+             if calibration is not None else None)
+    tick_us = (batch * scan_steps * split[0] + split[1]
+               if split is not None else None)
+
+    pending = list(steps_list)          # FIFO: remaining-step budgets
+    slots: list[int] = []               # remaining steps of occupied slots
+    done_ticks: list[int] = []          # completion tick per request, FIFO
+    tick = 0
+    while pending or slots:
+        while pending and len(slots) < batch:
+            slots.append(pending.pop(0))
+        tick += 1
+        nxt = []
+        for rem in slots:
+            rem -= scan_steps
+            if rem > 0:
+                nxt.append(rem)
+            else:
+                done_ticks.append(tick)
+        slots = nxt
+    lat_ms = [1e3 * t * tick_cycles / FREQ_HZ for t in done_ticks]
+    out: dict[str, float] = {
+        "requests": float(len(steps_list)),
+        "ticks": float(tick),
+        "dispatches": float(tick),
+    }
+    for p in pcts:
+        key = f"p{p:g}"
+        out[f"latency_{key}_ms"] = float(np_percentile(lat_ms, p))
+        if tick_us is not None:
+            out[f"calibrated_latency_{key}_us"] = float(
+                np_percentile([t * tick_us for t in done_ticks], p))
+    return out
+
+
+def np_percentile(values: list[float], p: float) -> float:
+    """Linear-interpolated percentile without importing numpy at module
+    scope (the cycle model stays dependency-light; numpy is already a repo
+    dependency everywhere this is called)."""
+    xs = sorted(values)
+    if not xs:
+        return 0.0
+    if len(xs) == 1:
+        return xs[0]
+    pos = (len(xs) - 1) * p / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
 
 
 def efficiency_vs_sparse(l: ConvLayer) -> float:

@@ -1,17 +1,34 @@
 """Generative serving loop: continuous-batching iterative decoder sampling
 on the decomposition engine (DESIGN.md §9).
 
-Requests arrive as ``(workload, steps, seed)`` and are packed into
-fixed-size device batches.  Diffusion requests iterate the DDIM step built
-by :func:`repro.launch.steps.make_gen_step` — timestep embedding + U-Net
-decoder forward through the fused transposed-conv kernels + DDIM update —
-one jitted call per scheduler tick with the image state donated.  Because
-the transposed-conv geometry is timestep-*invariant* (the timestep enters
-only as an embedded value), in-flight requests sitting at different
-denoising timesteps share a batch and one compiled step serves the whole
-queue; a slot that finishes is refilled from the queue on the next tick
-while its neighbours keep denoising.  DCGAN requests are single-shot: one
-tick through the k=4/s=2 generator completes every active slot.
+Requests arrive as ``(workload, steps, seed, slo)`` and are packed into
+per-workload device batches (*lanes*).  Diffusion requests iterate the DDIM
+step — timestep embedding + U-Net decoder forward through the fused
+transposed-conv kernels + DDIM update — and each scheduler tick is ONE
+jitted call that fuses up to ``scan_steps`` DDIM steps via ``lax.scan``
+(:func:`repro.launch.steps.make_gen_scan_step`): per-slot trajectories are
+padded into ``(B, K)`` timestep matrices, so mixed-step requests still
+share one compiled step while host dispatch overhead is paid once per
+``K`` steps.  Because the transposed-conv geometry is timestep-*invariant*
+(the timestep enters only as an embedded value), in-flight requests sitting
+at different denoising timesteps share a batch; a slot that finishes is
+refilled from the queue on the next tick while its neighbours keep
+denoising.  DCGAN requests are single-shot: one tick through the k=4/s=2
+generator completes every active slot.
+
+The scheduler is SLO-aware (DESIGN.md §9): every request carries an
+:class:`SLOClass` (priority rank + optional latency target + optional
+timeout).  Admission per lane orders by ``(class rank, deadline, arrival)``
+— strict priority across classes, FIFO within a class (same-class deadlines
+are arrival-ordered by construction), with an aging bound so no class
+starves — and *acts* on the calibrated ``est_us`` stamped at submit:
+a request whose remaining deadline budget cannot cover its estimated
+service time is shed at admission instead of wasting a slot.  Requests can
+be cancelled (or time out) both queued and mid-flight; a vacated slot is
+reusable on the next tick.  Under ``autoscale=True`` each lane grows and
+shrinks its device batch between compiled sizes as its backlog moves
+(``jax.jit`` caches one executable per batch shape, so revisited sizes
+redispatch without recompiling).
 
 This mirrors the LM path (``repro.launch.serve``): the scheduler is
 host-side and dumb, the device step is pure and compiled once.  The image
@@ -22,15 +39,16 @@ CPU-scale usage:
 
   PYTHONPATH=src python -m repro.launch.serve_gen --smoke
   PYTHONPATH=src python -m repro.launch.serve_gen --requests 6 \
-      --steps 8,5,3 --batch 4 --backend xla
+      --steps 8,5,3 --batch 4 --backend xla --scan-steps 4 --slo realtime
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
+import math
 import time
-from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +57,8 @@ import numpy as np
 from repro.core import cycle_model as cm
 from repro.core.gen_spec import GEN_WORKLOADS, UNET_WIDTHS
 from repro.distributed import sharding as shd
-from repro.launch.steps import DDIM_T_MAX, ddim_timesteps, make_gen_step
+from repro.launch.steps import (DDIM_T_MAX, ddim_timesteps,
+                                make_gen_scan_step)
 from repro.models import dcgan, unet_decoder
 
 
@@ -49,6 +68,84 @@ def init_noise(seed: int, shape: tuple[int, ...]) -> jax.Array:
     return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# SLO classes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SLOClass:
+    """One service-level class: admission priority + latency contract.
+
+    ``rank`` orders admission (lower admits first).  ``target_us`` is the
+    end-to-end latency budget measured from submit; when both it and the
+    request's calibrated ``est_us`` are known, a request whose remaining
+    budget cannot cover its estimated service time is *shed* at admission
+    (status ``"shed"``) instead of occupying a slot it is guaranteed to
+    miss in.  ``timeout_ticks`` is the default scheduler-tick lifetime
+    (queued + in-flight) for requests of the class; ``None`` never expires.
+    """
+    name: str
+    rank: int
+    target_us: float | None = None
+    timeout_ticks: int | None = None
+
+
+#: built-in classes; ``submit(..., slo=...)`` accepts a name here or any
+#: ad-hoc :class:`SLOClass` (tests pass tight targets to pin shedding).
+SLO_CLASSES = {
+    "realtime": SLOClass("realtime", 0, target_us=1e6),
+    "standard": SLOClass("standard", 1),
+    "batch": SLOClass("batch", 2),
+}
+
+#: admission waits longer than this many ticks promote a request to the
+#: front regardless of class — the cross-class anti-starvation bound
+#: (within a class admission is already FIFO).
+DEFAULT_STARVATION_TICKS = 64
+
+#: fused-dispatch depth used when ``scan_steps="auto"`` finds no
+#: calibration coverage for the lane's layer mix.
+DEFAULT_SCAN_STEPS = 4
+
+#: upper bound for the auto-chosen fused depth: past this the per-dispatch
+#: amortisation win is negligible while a tick's latency (and the work
+#: wasted by a mid-flight cancel) keeps growing linearly.
+MAX_SCAN_STEPS = 8
+
+
+def choose_scan_steps(calibration, layers, *, backend: str = "xla",
+                      batch: int = 1, target_tick_us: float = 50_000.0,
+                      max_scan: int = MAX_SCAN_STEPS) -> int:
+    """Fused depth K chosen against tick latency (the PR-6 calibration).
+
+    The largest K whose predicted fused-tick wall time — ``batch x K`` per-
+    pass compute plus one per-pass dispatch overhead
+    (:meth:`Calibration.predict_layers_split`) — stays within
+    ``target_tick_us``, clamped to ``[1, max_scan]``.  A longer scan
+    amortises host dispatch further but delays scheduler decisions
+    (admission, cancel, autoscale all happen between ticks), so the target
+    bounds the scheduler's reaction latency.  Without a calibration (or
+    without coverage for some layer kind) returns
+    :data:`DEFAULT_SCAN_STEPS`.
+    """
+    if max_scan < 1:
+        raise ValueError(f"max_scan must be >= 1, got {max_scan}")
+    split = (calibration.predict_layers_split(layers, backend=backend)
+             if calibration is not None else None)
+    if split is None:
+        return min(DEFAULT_SCAN_STEPS, max_scan)
+    compute_us, dispatch_us = split
+    per_step = batch * compute_us
+    if per_step <= 0.0:
+        return max_scan
+    k = int((target_tick_us - dispatch_us) // per_step)
+    return max(1, min(max_scan, k))
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
 @dataclass
 class GenRequest:
     """One sampling request; ticks are scheduler steps, not wall time."""
@@ -57,9 +154,16 @@ class GenRequest:
     steps: int
     seed: int
     submit_tick: int
+    slo: SLOClass = SLO_CLASSES["standard"]
+    timeout_ticks: int | None = None
+    submit_wall: float = field(default_factory=time.perf_counter)
     admit_tick: int = -1
     done_tick: int = -1
+    done_wall: float = 0.0
     result: np.ndarray | None = None
+    # lifecycle: pending -> active -> done, or a terminal non-result state
+    # (cancelled / timeout / shed) — terminal states never hold a result
+    status: str = "pending"
     # calibrated host-time admission estimate (us) for the whole request, or
     # None when the server has no calibration fitted for this layer mix
     est_us: float | None = None
@@ -68,39 +172,73 @@ class GenRequest:
     def wait_ticks(self) -> int:
         return self.admit_tick - self.submit_tick
 
+    @property
+    def latency_s(self) -> float:
+        """Submit-to-completion wall latency (0.0 until done)."""
+        return (self.done_wall - self.submit_wall) if self.done_wall else 0.0
+
+    def deadline_us(self) -> float:
+        """Absolute wall deadline in perf-counter microseconds (inf when the
+        class carries no latency target)."""
+        if self.slo.target_us is None:
+            return math.inf
+        return self.submit_wall * 1e6 + self.slo.target_us
+
+
+# ---------------------------------------------------------------------------
+# Lanes
+# ---------------------------------------------------------------------------
 
 class _DiffusionLane:
-    """Fixed-size batch of diffusion slots over one compiled DDIM step."""
+    """Resizable batch of diffusion slots over one compiled K-step scan."""
 
     def __init__(self, params: dict, *, batch: int, widths: tuple[int, ...],
                  hw: int, out_ch: int, backend: str,
                  interpret: bool | None, decomposed: bool, mesh=None,
-                 spatial: bool = False):
+                 spatial: bool = False, scan_steps: int = 1):
         size = hw * 2 ** len(widths)
         self.image_shape = (size, size, out_ch)
         self.params = params
-        step = make_gen_step(decomposed=decomposed, backend=backend,
-                             interpret=interpret)
-        x = jnp.zeros((batch,) + self.image_shape, jnp.float32)
+        self.scan_steps = scan_steps
+        self.mesh, self.spatial = mesh, spatial
+        self._raw_step = make_gen_scan_step(scan_steps, decomposed=decomposed,
+                                            backend=backend,
+                                            interpret=interpret)
         if mesh is not None:
-            sh = shd.image_sharding(mesh, x.shape, spatial=spatial)
             self.params = jax.device_put(params, shd.replicated(mesh))
-            x = jax.device_put(x, sh)
-            self._step = jax.jit(step, donate_argnums=(1,), out_shardings=sh)
-        else:
-            self._step = jax.jit(step, donate_argnums=(1,))
-        self.x = x
+        self.device_steps = 0       # host dispatches (one per busy tick)
+        self.substeps = 0           # active trajectory steps actually taken
+        self.compiled_sizes: set[int] = set()
+        self._alloc(batch)
+
+    def _jit_step(self, batch: int):
+        """One jitted K-step scan per mesh sharding; ``jax.jit`` itself
+        caches one executable per batch shape, so lanes revisiting a size
+        after autoscaling redispatch without recompiling."""
+        if self.mesh is not None:
+            sh = shd.image_sharding(self.mesh, (batch,) + self.image_shape,
+                                    spatial=self.spatial)
+            return jax.jit(self._raw_step, donate_argnums=(1,),
+                           out_shardings=sh), sh
+        return jax.jit(self._raw_step, donate_argnums=(1,)), None
+
+    def _alloc(self, batch: int) -> None:
+        self.batch = batch
+        self._step, sh = self._jit_step(batch)
+        x = jnp.zeros((batch,) + self.image_shape, jnp.float32)
+        self.x = x if sh is None else jax.device_put(x, sh)
         self.slots: list[GenRequest | None] = [None] * batch
         self._traj: list[np.ndarray | None] = [None] * batch
         self._pos = [0] * batch
-        self.t = np.zeros(batch, np.int32)
-        self.t_next = np.full(batch, -1, np.int32)
         self.active = np.zeros(batch, bool)
-        self.device_steps = 0
 
     @property
     def busy(self) -> bool:
         return self.active.any()
+
+    @property
+    def active_count(self) -> int:
+        return int(self.active.sum())
 
     def free_slot(self) -> int | None:
         for i, s in enumerate(self.slots):
@@ -113,51 +251,109 @@ class _DiffusionLane:
         self.slots[slot] = req
         self._traj[slot] = traj
         self._pos[slot] = 0
-        self.t[slot] = traj[0]
-        self.t_next[slot] = traj[1] if req.steps > 1 else -1
         self.active[slot] = True
         self.x = self.x.at[slot].set(init_noise(req.seed, self.image_shape))
 
+    def release(self, slot: int) -> None:
+        """Vacate a slot mid-flight (cancel/timeout): the slot is reusable
+        on the next admission pass; the stale image rows are inert (the
+        active mask keeps them out of every future scan substep)."""
+        self.slots[slot] = self._traj[slot] = None
+        self._pos[slot] = 0
+        self.active[slot] = False
+
+    def resize(self, new_batch: int) -> None:
+        """Re-pack occupied slots into a ``new_batch``-sized lane.
+
+        Occupied slots compact to the front in slot order; every request's
+        trajectory position and image state move with it, so a resize never
+        perturbs a sample (pinned bitwise in ``tests/test_serve_gen.py``).
+        """
+        occ = [i for i, s in enumerate(self.slots) if s is not None]
+        if len(occ) > new_batch:
+            raise ValueError(
+                f"cannot shrink to {new_batch}: {len(occ)} slots occupied")
+        if new_batch == self.batch:
+            return
+        old = (self.x, [self.slots[i] for i in occ],
+               [self._traj[i] for i in occ], [self._pos[i] for i in occ])
+        self._alloc(new_batch)
+        x_old, slots, trajs, poss = old
+        if occ:
+            self.x = self.x.at[:len(occ)].set(
+                x_old[jnp.asarray(occ, jnp.int32)])
+        for i, (s, tr, p) in enumerate(zip(slots, trajs, poss)):
+            self.slots[i], self._traj[i], self._pos[i] = s, tr, p
+            self.active[i] = True
+
     def tick(self) -> list[GenRequest]:
-        batch = {"t": jnp.asarray(self.t), "t_next": jnp.asarray(self.t_next),
-                 "active": jnp.asarray(self.active)}
+        b, k = self.batch, self.scan_steps
+        t = np.zeros((b, k), np.int32)
+        t_next = np.full((b, k), -1, np.int32)
+        act = np.zeros((b, k), bool)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            traj, p = self._traj[i], self._pos[i]
+            take = min(k, len(traj) - p)
+            for j in range(take):
+                t[i, j] = traj[p + j]
+                if p + j + 1 < len(traj):
+                    t_next[i, j] = traj[p + j + 1]
+                act[i, j] = True
+        if self.batch not in self.compiled_sizes:
+            self.compiled_sizes.add(self.batch)
+        batch = {"t": jnp.asarray(t), "t_next": jnp.asarray(t_next),
+                 "active": jnp.asarray(act)}
         self.x = self._step(self.params, self.x, batch)
         self.device_steps += 1
+        self.substeps += int(act.sum())
         done = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
-            self._pos[i] += 1
-            traj = self._traj[i]
-            if self._pos[i] == len(traj):          # landed on x0
+            self._pos[i] += int(act[i].sum())
+            if self._pos[i] == len(self._traj[i]):        # landed on x0
                 req.result = np.asarray(self.x[i])
                 done.append(req)
-                self.slots[i] = self._traj[i] = None
-                self.active[i] = False
-            else:
-                self.t[i] = traj[self._pos[i]]
-                self.t_next[i] = (traj[self._pos[i] + 1]
-                                  if self._pos[i] + 1 < len(traj) else -1)
+                self.release(i)
         return done
 
 
 class _DCGANLane:
-    """Single-shot generation: one tick drains every active latent slot."""
+    """Single-shot generation: one tick drains every active latent slot.
+
+    The generator forward is jitted ONCE here (with the static backend
+    arguments closed over), not re-entered through the module-level wrapper
+    every tick — one compile per batch size, then pure dispatch (warm-tick
+    dispatch count pinned in ``tests/test_serve_gen.py``).
+    """
 
     def __init__(self, params: dict, *, batch: int, nz: int, backend: str,
                  interpret: bool | None, decomposed: bool):
         self.params = params
         self.nz = nz
-        self._fwd_kw = dict(decomposed=decomposed, backend=backend,
-                            interpret=interpret)
-        self.z = jnp.zeros((batch, nz), jnp.float32)
+        self._step = jax.jit(functools.partial(
+            dcgan.forward, decomposed=decomposed, backend=backend,
+            interpret=interpret))
+        self.device_steps = 0
+        self.substeps = 0
+        self.compiled_sizes: set[int] = set()
+        self._alloc(batch)
+
+    def _alloc(self, batch: int) -> None:
+        self.batch = batch
+        self.z = jnp.zeros((batch, self.nz), jnp.float32)
         self.slots: list[GenRequest | None] = [None] * batch
         self.active = np.zeros(batch, bool)
-        self.device_steps = 0
 
     @property
     def busy(self) -> bool:
         return self.active.any()
+
+    @property
+    def active_count(self) -> int:
+        return int(self.active.sum())
 
     def free_slot(self) -> int | None:
         for i, s in enumerate(self.slots):
@@ -170,35 +366,73 @@ class _DCGANLane:
         self.active[slot] = True
         self.z = self.z.at[slot].set(init_noise(req.seed, (self.nz,)))
 
+    def release(self, slot: int) -> None:
+        self.slots[slot] = None
+        self.active[slot] = False
+
+    def resize(self, new_batch: int) -> None:
+        occ = [i for i, s in enumerate(self.slots) if s is not None]
+        if len(occ) > new_batch:
+            raise ValueError(
+                f"cannot shrink to {new_batch}: {len(occ)} slots occupied")
+        if new_batch == self.batch:
+            return
+        z_old, slots = self.z, [self.slots[i] for i in occ]
+        self._alloc(new_batch)
+        if occ:
+            self.z = self.z.at[:len(occ)].set(
+                z_old[jnp.asarray(occ, jnp.int32)])
+        for i, s in enumerate(slots):
+            self.slots[i] = s
+            self.active[i] = True
+
     def tick(self) -> list[GenRequest]:
-        imgs = np.asarray(dcgan.forward(self.params, self.z, **self._fwd_kw))
+        if self.batch not in self.compiled_sizes:
+            self.compiled_sizes.add(self.batch)
+        imgs = np.asarray(self._step(self.params, self.z))
         self.device_steps += 1
         done = []
         for i, req in enumerate(self.slots):
             if req is None:
                 continue
+            self.substeps += 1
             req.result = imgs[i]
             done.append(req)
-            self.slots[i] = None
-            self.active[i] = False
+            self.release(i)
         return done
 
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
 
 class GenServer:
     """Continuous-batching generative server over the decomposition engine.
 
-    One lane (fixed-size device batch + compiled step) per workload, built
+    One lane (device batch + compiled K-step scan) per workload, built
     lazily on the first request for it.  ``submit`` enqueues, ``step`` runs
-    one scheduler tick (admit into free slots, then one device step per busy
-    lane), ``run`` drains the queue and returns ``rid -> image``.
+    one scheduler tick (expire timeouts, autoscale, admit into free slots,
+    then one fused device dispatch per busy lane), ``run`` drains the queue
+    and returns ``rid -> image``.
 
-    Admission is FIFO per workload — a request never overtakes an earlier
-    request for the same lane, and a full lane never blocks another lane —
-    so no request starves (pinned in ``tests/test_serve_gen.py``).
+    **Admission** (DESIGN.md §9): per lane, pending requests order by
+    ``(SLO rank, deadline, arrival)`` — strict priority across classes,
+    FIFO within a class (a class's deadlines are arrival-ordered because
+    the latency target is a constant offset), and any request waiting
+    longer than ``starvation_ticks`` is promoted to the front, so no class
+    starves.  A full lane never blocks another lane.  When a request
+    carries both a calibrated ``est_us`` stamp and a latency target, an
+    admission attempt whose remaining budget is below the estimate *sheds*
+    the request (status ``"shed"``) instead of burning a slot on a
+    guaranteed SLO miss — the scheduler finally acting on the PR-6
+    admission estimates.
 
-    ``params`` overrides model parameters per workload name (tests and the
-    smoke paths pass tiny-width denoisers); otherwise lanes initialise
-    canonical-width parameters from ``param_seed``.
+    ``scan_steps`` fuses K DDIM steps per dispatch (``"auto"`` sizes K per
+    lane from the calibration via :func:`choose_scan_steps`); ``autoscale``
+    lets each lane grow/shrink its batch between compiled sizes with its
+    backlog.  ``params`` overrides model parameters per workload name
+    (tests and the smoke paths pass tiny-width denoisers); otherwise lanes
+    initialise canonical-width parameters from ``param_seed``.
     """
 
     def __init__(self, *, batch: int = 4, backend: str = "xla",
@@ -207,7 +441,17 @@ class GenServer:
                  unet_widths: tuple[int, ...] = UNET_WIDTHS, unet_hw: int = 8,
                  out_ch: int = 3, dcgan_nz: int = 100, dcgan_ngf: int = 64,
                  params: dict | None = None, param_seed: int = 0,
-                 calibration=None):
+                 calibration=None, scan_steps: int | str = 1,
+                 autoscale: bool = False, min_batch: int = 1,
+                 max_batch: int | None = None, shrink_patience: int = 2,
+                 starvation_ticks: int = DEFAULT_STARVATION_TICKS):
+        if isinstance(scan_steps, str):
+            if scan_steps != "auto":
+                raise ValueError(
+                    f"scan_steps must be an int >= 1 or 'auto', "
+                    f"got {scan_steps!r}")
+        elif scan_steps < 1:
+            raise ValueError(f"scan_steps must be >= 1, got {scan_steps}")
         self.batch = batch
         self.backend = backend
         self.interpret = interpret
@@ -219,14 +463,56 @@ class GenServer:
         self._params = dict(params or {})
         self._param_seed = param_seed
         self.calibration = calibration
+        self.scan_steps = scan_steps
+        self.autoscale = autoscale
+        self.min_batch = max(1, min_batch)
+        self.max_batch = max(batch, max_batch or batch * 4)
+        self.shrink_patience = shrink_patience
+        self.starvation_ticks = starvation_ticks
         self._lanes: dict[str, _DiffusionLane | _DCGANLane] = {}
-        self._pending: deque[GenRequest] = deque()
+        self._idle_ticks: dict[str, int] = {}
+        self._pending: list[GenRequest] = []
         self._done: dict[int, GenRequest] = {}
+        self._requests: dict[int, GenRequest] = {}
         self._tick = 0
         self._next_rid = 0
         self._t0: float | None = None
+        # per-tick log: (wall_s, dispatches, completions, substeps, cold) —
+        # cold = a lane compiled a new batch shape inside the tick, so warm
+        # throughput can be reported without the compile wall (stats())
+        self._tick_log: list[tuple[float, int, int, int, bool]] = []
 
     # -------------------------------------------------------------- lanes --
+    def _workload_layers(self, workload: str):
+        """Layer table of the geometry this server will actually execute.
+
+        The canonical ``GEN_WORKLOADS`` tables assume canonical widths; a
+        server constructed with overrides (``--smoke``, tests,
+        ``unet_widths``/``unet_hw``) runs a different geometry, and an
+        admission estimate priced off the canonical table would not match
+        what executes — so the table is derived from the lane parameters.
+        """
+        from repro.core import gen_spec
+
+        if workload == "unet_dec":
+            return gen_spec.unet_decoder_layers(
+                tuple(self.unet_widths), hw=self.unet_hw, out_ch=self.out_ch)
+        if workload in ("dcgan64", "dcgan128"):
+            return gen_spec.dcgan_layers(
+                int(workload[5:]), nz=self.dcgan_nz, ngf=self.dcgan_ngf,
+                out_ch=self.out_ch)
+        raise ValueError(f"unknown workload {workload!r}; "
+                         f"known: {sorted(GEN_WORKLOADS)}")
+
+    def _lane_scan_steps(self, workload: str) -> int:
+        if workload != "unet_dec":
+            return 1            # single-shot lanes have no trajectory to fuse
+        if self.scan_steps == "auto":
+            return choose_scan_steps(self.calibration,
+                                     self._workload_layers(workload),
+                                     backend=self.backend, batch=self.batch)
+        return int(self.scan_steps)
+
     def _lane(self, workload: str):
         lane = self._lanes.get(workload)
         if lane is not None:
@@ -239,7 +525,9 @@ class GenServer:
                 out_ch=self.out_ch)
             lane = _DiffusionLane(p, batch=self.batch, widths=self.unet_widths,
                                   hw=self.unet_hw, out_ch=self.out_ch,
-                                  mesh=self.mesh, spatial=self.spatial, **kw)
+                                  mesh=self.mesh, spatial=self.spatial,
+                                  scan_steps=self._lane_scan_steps(workload),
+                                  **kw)
         elif workload in ("dcgan64", "dcgan128"):
             size = int(workload[5:])
             p = self._params.get(workload) or dcgan.init_params(
@@ -250,68 +538,173 @@ class GenServer:
             raise ValueError(f"unknown workload {workload!r}; "
                              f"known: {sorted(GEN_WORKLOADS)}")
         self._lanes[workload] = lane
+        self._idle_ticks[workload] = 0
         return lane
 
     # ---------------------------------------------------------- scheduling --
     def admission_estimate(self, workload: str, steps: int = 1) -> float | None:
         """Calibrated host-time estimate (us) for one request: the fitted
-        per-kind cycles->us mapping applied to the workload's canonical layer
-        table x DDIM ``steps``.  None without a calibration, or when the
-        calibration lacks a fitted key for one of the workload's layer kinds
-        on this server's backend — callers must treat that as "no estimate",
-        not zero cost."""
+        per-kind cycles->us mapping applied to the layer table of the
+        geometry THIS server executes (``_workload_layers`` — canonical only
+        when the server runs canonical widths) x DDIM ``steps``.  None
+        without a calibration, or when the calibration lacks a fitted key
+        for one of the workload's layer kinds on this server's backend —
+        callers must treat that as "no estimate", not zero cost."""
         if self.calibration is None:
             return None
-        us = self.calibration.predict_layers(GEN_WORKLOADS[workload](),
+        us = self.calibration.predict_layers(self._workload_layers(workload),
                                              backend=self.backend)
         return None if us is None else us * max(steps, 1)
 
-    def submit(self, workload: str, *, steps: int = 1, seed: int = 0) -> int:
+    def submit(self, workload: str, *, steps: int = 1, seed: int = 0,
+               slo: str | SLOClass = "standard",
+               timeout_ticks: int | None = None) -> int:
         """Enqueue a request; returns its id.  DCGAN is single-shot
         (``steps`` is forced to 1); diffusion runs a ``steps``-step DDIM
-        trajectory."""
+        trajectory.  ``slo`` is a name from :data:`SLO_CLASSES` or an
+        ad-hoc :class:`SLOClass`; ``timeout_ticks`` overrides the class
+        default lifetime."""
         self._lane(workload)        # fail fast on unknown workloads
+        if isinstance(slo, str):
+            try:
+                slo = SLO_CLASSES[slo]
+            except KeyError:
+                raise ValueError(f"unknown SLO class {slo!r}; known: "
+                                 f"{sorted(SLO_CLASSES)}") from None
         if workload != "unet_dec":
             steps = 1
-        req = GenRequest(self._next_rid, workload, steps, seed, self._tick)
+        req = GenRequest(self._next_rid, workload, steps, seed, self._tick,
+                         slo=slo,
+                         timeout_ticks=(slo.timeout_ticks
+                                        if timeout_ticks is None
+                                        else timeout_ticks))
         req.est_us = self.admission_estimate(workload, steps)
         self._next_rid += 1
         self._pending.append(req)
+        self._requests[req.rid] = req
         return req.rid
 
+    def cancel(self, rid: int, status: str = "cancelled") -> bool:
+        """Cancel a request wherever it lives.
+
+        Queued requests leave the queue; in-flight requests vacate their
+        slot (reusable on the next tick; the lane's active mask keeps the
+        stale image rows out of every future substep).  Terminal requests
+        (done or already cancelled) are left untouched.  Returns whether
+        anything was cancelled.  No result is ever recorded for a cancelled
+        request.
+        """
+        req = self._requests.get(rid)
+        if req is None or req.status in ("done", "cancelled", "timeout",
+                                         "shed"):
+            return False
+        if req.status == "pending":
+            self._pending.remove(req)
+        else:                                   # active: vacate the slot
+            lane = self._lanes[req.workload]
+            lane.release(lane.slots.index(req))
+        req.status = status
+        return True
+
+    def _expire(self) -> None:
+        """Time out requests (queued or in-flight) past their tick budget."""
+        for req in list(self._requests.values()):
+            if req.status not in ("pending", "active"):
+                continue
+            if req.timeout_ticks is None:
+                continue
+            if self._tick - req.submit_tick >= req.timeout_ticks:
+                self.cancel(req.rid, status="timeout")
+
+    def _admission_key(self, req: GenRequest):
+        """Priority ordering: aged requests first (cross-class starvation
+        bound), then SLO rank, then deadline (FIFO within a class — equal
+        targets make deadline order arrival order), then arrival."""
+        aged = (self._tick - req.submit_tick) >= self.starvation_ticks
+        return (0 if aged else 1, req.slo.rank, req.deadline_us(), req.rid)
+
     def _admit(self) -> None:
-        kept: deque[GenRequest] = deque()
-        while self._pending:
-            req = self._pending.popleft()
-            lane = self._lane(req.workload)
-            # same-lane FIFO: once one request for a lane waits, later
-            # requests for that lane wait behind it
-            slot = None if any(k.workload == req.workload for k in kept) \
-                else lane.free_slot()
-            if slot is None:
-                kept.append(req)
-            else:
+        now_us = time.perf_counter() * 1e6
+        by_lane: dict[str, list[GenRequest]] = {}
+        for req in self._pending:
+            by_lane.setdefault(req.workload, []).append(req)
+        for workload, reqs in by_lane.items():
+            lane = self._lane(workload)
+            for req in sorted(reqs, key=self._admission_key):
+                # deadline-infeasible: the stamped estimate says the SLO is
+                # already unmeetable — shed rather than burn the slot
+                if (req.est_us is not None
+                        and req.deadline_us() - now_us < req.est_us):
+                    self._pending.remove(req)
+                    req.status = "shed"
+                    continue
+                slot = lane.free_slot()
+                if slot is None:
+                    break               # lane full; later classes wait too
                 req.admit_tick = self._tick
+                req.status = "active"
                 lane.admit(req, slot)
-        self._pending = kept
+                self._pending.remove(req)
+
+    def _autoscale(self) -> None:
+        """Grow a backlogged lane / shrink an underused one, one ladder
+        rung (x2 / ÷2) per tick, within ``[min_batch, max_batch]``.  Policy
+        is a pure function of queue state, so a given request sequence
+        always produces the same batch trajectory (pinned in tests)."""
+        backlog: dict[str, int] = {}
+        for req in self._pending:
+            backlog[req.workload] = backlog.get(req.workload, 0) + 1
+        for workload, lane in self._lanes.items():
+            want = backlog.get(workload, 0)
+            free = lane.batch - lane.active_count
+            if want > free and lane.batch < self.max_batch:
+                lane.resize(min(lane.batch * 2, self.max_batch))
+                self._idle_ticks[workload] = 0
+                continue
+            half = lane.batch // 2
+            if (want == 0 and half >= self.min_batch
+                    and lane.active_count <= half):
+                self._idle_ticks[workload] += 1
+                if self._idle_ticks[workload] >= self.shrink_patience:
+                    lane.resize(half)
+                    self._idle_ticks[workload] = 0
+            else:
+                self._idle_ticks[workload] = 0
 
     def step(self) -> list[GenRequest]:
         """One scheduler tick; returns the requests completed by it."""
+        t_start = time.perf_counter()
         if self._t0 is None:
-            self._t0 = time.perf_counter()
+            self._t0 = t_start
+        self._expire()
+        if self.autoscale:
+            self._autoscale()
         self._admit()
         done: list[GenRequest] = []
+        dispatches = substeps = 0
+        cold = False
         for lane in self._lanes.values():
             if lane.busy:
+                cold = cold or lane.batch not in lane.compiled_sizes
+                sub0 = lane.substeps
                 done.extend(lane.tick())
+                dispatches += 1
+                substeps += lane.substeps - sub0
         self._tick += 1
+        t_end = time.perf_counter()
         for req in done:
             req.done_tick = self._tick
+            req.done_wall = t_end
+            req.status = "done"
             self._done[req.rid] = req
+        self._tick_log.append(
+            (t_end - t_start, dispatches, len(done), substeps, cold))
         return done
 
     def run(self) -> dict[int, np.ndarray]:
-        """Drain queue + in-flight work; returns ``rid -> image``."""
+        """Drain queue + in-flight work; returns ``rid -> image`` for the
+        requests that completed (cancelled/timed-out/shed requests are
+        absent — their status lives on ``server.request(rid)``)."""
         while self._pending or any(l.busy for l in self._lanes.values()):
             self.step()
         return {rid: r.result for rid, r in sorted(self._done.items())}
@@ -321,20 +714,48 @@ class GenServer:
     def completed(self) -> dict[int, GenRequest]:
         return dict(self._done)
 
+    def request(self, rid: int) -> GenRequest:
+        """Any submitted request by id (whatever its lifecycle state)."""
+        return self._requests[rid]
+
     def stats(self) -> dict[str, float]:
         wall = (time.perf_counter() - self._t0) if self._t0 else 0.0
         dev_steps = sum(l.device_steps for l in self._lanes.values())
+        substeps = sum(l.substeps for l in self._lanes.values())
         n = len(self._done)
         waits = [r.wait_ticks for r in self._done.values()]
+        lats = sorted(r.latency_s for r in self._done.values())
+        statuses = [r.status for r in self._requests.values()]
+        # warm-steady window: ticks in which no lane compiled a new batch
+        # shape — first-tick (and resize-tick) jit compiles are excluded the
+        # same way ``kernels.util.time_call`` excludes compile from every
+        # other timed region in the repo
+        warm = [t for t in self._tick_log if not t[4]]
+        warm_wall = sum(t[0] for t in warm)
+        warm_imgs = sum(t[2] for t in warm)
+        warm_sub = sum(t[3] for t in warm)
+        pct = (lambda p: cm.np_percentile(lats, p)) if lats else (lambda p: 0.0)
         return {
             "requests": n,
             "ticks": self._tick,
             "device_steps": dev_steps,
+            "substeps": substeps,
             "wall_s": wall,
+            # whole-window throughput (includes first-tick compile — kept
+            # for trajectory continuity with pre-fix revisions)
             "images_per_s": n / wall if wall else 0.0,
             "steps_per_s": dev_steps / wall if wall else 0.0,
+            # warm-steady throughput: compile ticks excluded
+            "warm_wall_s": warm_wall,
+            "warm_images_per_s": warm_imgs / warm_wall if warm_wall else 0.0,
+            "warm_steps_per_s": warm_sub / warm_wall if warm_wall else 0.0,
+            "latency_p50_s": pct(50.0),
+            "latency_p99_s": pct(99.0),
             "mean_wait_ticks": float(np.mean(waits)) if waits else 0.0,
             "max_wait_ticks": float(np.max(waits)) if waits else 0.0,
+            "cancelled": float(statuses.count("cancelled")),
+            "timeout": float(statuses.count("timeout")),
+            "shed": float(statuses.count("shed")),
         }
 
 
@@ -343,17 +764,19 @@ def reference_sample(params: dict, *, steps: int, seed: int, image_size: int,
                      interpret: bool | None = None, decomposed: bool = True,
                      t_max: int = DDIM_T_MAX) -> np.ndarray:
     """Unbatched single-request DDIM loop — the parity oracle the served
-    (mixed-timestep, continuously batched) path must match to <= 1e-5."""
-    step = jax.jit(make_gen_step(t_max=t_max, decomposed=decomposed,
-                                 backend=backend, interpret=interpret),
+    (mixed-timestep, continuously batched, K-step fused) path must match
+    bitwise on xla / <= 1e-5 across backends.  Deliberately K=1: the fused
+    scan must reproduce the one-step-at-a-time trajectory exactly."""
+    step = jax.jit(make_gen_scan_step(1, t_max=t_max, decomposed=decomposed,
+                                      backend=backend, interpret=interpret),
                    donate_argnums=(1,))
     traj = ddim_timesteps(steps, t_max)
     x = init_noise(seed, (image_size, image_size, out_ch))[None]
     for i, t in enumerate(traj):
         nxt = int(traj[i + 1]) if i + 1 < len(traj) else -1
-        batch = {"t": jnp.full((1,), int(t), jnp.int32),
-                 "t_next": jnp.full((1,), nxt, jnp.int32),
-                 "active": jnp.ones((1,), bool)}
+        batch = {"t": jnp.full((1, 1), int(t), jnp.int32),
+                 "t_next": jnp.full((1, 1), nxt, jnp.int32),
+                 "active": jnp.ones((1, 1), bool)}
         x = step(params, x, batch)
     return np.asarray(x)[0]
 
@@ -368,13 +791,25 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--backend", default="xla", choices=("xla", "pallas"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scan-steps", default="auto",
+                    help="DDIM steps fused per dispatch (int or 'auto': "
+                         "sized against tick latency from the calibration)")
+    ap.add_argument("--slo", default="standard", choices=sorted(SLO_CLASSES),
+                    help="SLO class stamped on every submitted request")
+    ap.add_argument("--timeout-ticks", type=int, default=None,
+                    help="per-request scheduler-tick timeout")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="grow/shrink lane batches with backlog")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny widths (CI): 16x16 images, small DCGAN")
     ns = ap.parse_args()
 
     from repro.core import calibrate as cal
 
-    kw: dict = dict(batch=ns.batch, backend=ns.backend)
+    scan: int | str = ns.scan_steps if ns.scan_steps == "auto" \
+        else int(ns.scan_steps)
+    kw: dict = dict(batch=ns.batch, backend=ns.backend, scan_steps=scan,
+                    autoscale=ns.autoscale)
     if ns.smoke or (ns.backend == "pallas" and jax.default_backend() == "cpu"):
         # interpret-mode pallas needs tiny widths to stay tractable on CPU
         kw.update(unet_widths=(8, 8), unet_hw=4, dcgan_nz=16, dcgan_ngf=4)
@@ -385,26 +820,45 @@ def main() -> None:
     step_list = [int(s) for s in ns.steps.split(",")]
     for i in range(ns.requests):
         server.submit(ns.workload, steps=step_list[i % len(step_list)],
-                      seed=ns.seed + i)
+                      seed=ns.seed + i, slo=ns.slo,
+                      timeout_ticks=ns.timeout_ticks)
     images = server.run()
     st = server.stats()
+    lane = server._lanes[ns.workload]
     print(f"[serve_gen] {st['requests']} requests "
-          f"({ns.workload}, steps {ns.steps}) in {st['wall_s']:.2f}s over "
-          f"{st['ticks']} ticks / {st['device_steps']} device steps: "
-          f"{st['images_per_s']:.2f} img/s, {st['steps_per_s']:.1f} steps/s")
-    shp = next(iter(images.values())).shape
-    print(f"[serve_gen] image shape {shp}; "
-          f"mean wait {st['mean_wait_ticks']:.1f} ticks "
-          f"(max {st['max_wait_ticks']:.0f})")
+          f"({ns.workload}, steps {ns.steps}, slo={ns.slo}, "
+          f"scan_steps={getattr(lane, 'scan_steps', 1)}) in "
+          f"{st['wall_s']:.2f}s over {st['ticks']} ticks / "
+          f"{st['device_steps']} dispatches ({st['substeps']} substeps): "
+          f"{st['images_per_s']:.2f} img/s "
+          f"(warm {st['warm_images_per_s']:.2f}), "
+          f"p50 {st['latency_p50_s'] * 1e3:.0f} ms / "
+          f"p99 {st['latency_p99_s'] * 1e3:.0f} ms")
+    dropped = int(st["cancelled"] + st["timeout"] + st["shed"])
+    if dropped:
+        print(f"[serve_gen] dropped {dropped} request(s): "
+              f"{st['cancelled']:.0f} cancelled, {st['timeout']:.0f} "
+              f"timed out, {st['shed']:.0f} shed at admission")
+    if images:
+        shp = next(iter(images.values())).shape
+        print(f"[serve_gen] image shape {shp}; "
+              f"mean wait {st['mean_wait_ticks']:.1f} ticks "
+              f"(max {st['max_wait_ticks']:.0f})")
     rep = cm.serve_report(GEN_WORKLOADS[ns.workload](),
                           steps=max(step_list),
+                          scan_steps=getattr(lane, "scan_steps", 1),
+                          steps_list=[step_list[i % len(step_list)]
+                                      for i in range(ns.requests)],
                           calibration=server.calibration,
                           backend=ns.backend)
     print(f"[serve_gen] cycle model ({ns.workload}, canonical widths, "
-          f"{max(step_list)} steps/sample): "
+          f"{max(step_list)} steps/sample, "
+          f"{rep['dispatches_per_image']:.0f} dispatches/image): "
           f"{rep['images_per_s_ours']:.1f} img/s decomposed vs "
           f"{rep['images_per_s_naive']:.1f} naive "
-          f"({rep['serve_speedup_vs_naive']:.2f}x)")
+          f"({rep['serve_speedup_vs_naive']:.2f}x); modeled drain "
+          f"p50 {rep['latency_p50_ms']:.1f} ms / "
+          f"p99 {rep['latency_p99_ms']:.1f} ms")
     if "calibrated_us_per_image" in rep:
         print(f"[serve_gen] calibrated host estimate: "
               f"{rep['calibrated_us_per_image']:.0f} us/image "

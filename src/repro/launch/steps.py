@@ -11,6 +11,10 @@ drive it from a host-side scheduler" — this module holds the builders:
   decoder denoiser (timestep embedding + decoder forward + DDIM update);
   driven by ``repro.launch.serve_gen``.  Timesteps/activity are *data*, so
   a whole mixed-timestep request batch shares one compiled step.
+* :func:`make_gen_scan_step` — ``K`` fused DDIM steps per dispatch via
+  ``lax.scan`` over the same body; per-slot trajectories arrive as padded
+  ``(B, K)`` timestep matrices, so mixed-step request sets still share one
+  compiled step while host dispatch overhead is paid once per ``K`` steps.
 
 The LM builders are shape-polymorphic enough to be used identically by the
 dry-run (``jax.jit(fn, ...).lower(*abstract_specs)`` — no allocation) and
@@ -228,6 +232,45 @@ def make_gen_step(*, t_max: int = DDIM_T_MAX, decomposed: bool = True,
         return jnp.where(active[:, None, None, None], x_new, x)
 
     return gen_step
+
+
+def make_gen_scan_step(scan_steps: int, *, t_max: int = DDIM_T_MAX,
+                       decomposed: bool = True, backend: str = "xla",
+                       interpret: bool | None = None):
+    """``scan_steps`` fused DDIM steps per dispatch (``lax.scan``).
+
+    Returns ``gen_scan_step(params, x, batch) -> x'`` where ``batch`` carries
+    padded per-slot trajectory *matrices* instead of vectors:
+
+    * ``t``      (B, K) int32 — timestep of slot ``b`` at substep ``j``;
+    * ``t_next`` (B, K) int32 — next timestep (``-1`` = land on x0);
+    * ``active`` (B, K) bool  — padding columns (a slot with fewer than ``K``
+      remaining steps, or an empty slot) pass through bit-exactly.
+
+    The scan body is exactly the single-step :func:`make_gen_step` closure,
+    so a ``K``-fused dispatch is bitwise-equal on xla to ``K`` separate
+    dispatches of the same trajectory — mixed-step request sets share one
+    compiled step, and the host pays one dispatch per ``K`` denoising steps
+    (the amortisation ``cycle_model.serve_report(scan_steps=...)`` models).
+    ``scan_steps=1`` degenerates to the single-step form (still scanned, so
+    the compiled artifact is shape-stable in ``K``).
+    """
+    if scan_steps < 1:
+        raise ValueError(f"scan_steps must be >= 1, got {scan_steps}")
+    step = make_gen_step(t_max=t_max, decomposed=decomposed, backend=backend,
+                         interpret=interpret)
+
+    def gen_scan_step(params, x, batch):
+        # (B, K) -> (K, B): scan iterates substeps, each seeing one column
+        subs = {k: jnp.moveaxis(v, 0, 1) for k, v in batch.items()}
+
+        def body(carry, sub):
+            return step(params, carry, sub), None
+
+        x, _ = jax.lax.scan(body, x, subs)
+        return x
+
+    return gen_scan_step
 
 
 def default_microbatches(cfg: ModelConfig) -> int:
