@@ -46,8 +46,10 @@ def _ratios(rows: list[tuple]) -> dict:
 
 
 #: derived keys of the measured ``serve.*`` rows that form the serving
-#: latency trajectory (``perf_gate.py`` gates them at wall-ratio tolerance)
-_SERVE_KEYS = ("p50_us", "p99_us", "dispatches_per_image")
+#: latency trajectory (``perf_gate.py`` gates them at wall-ratio tolerance);
+#: restore/degraded keys come from the fault-tolerance rows (DESIGN.md §11)
+_SERVE_KEYS = ("p50_us", "p99_us", "dispatches_per_image",
+               "restore_us", "recovered_imgs_per_s", "degraded_imgs_per_s")
 
 
 def _serve_latency(rows: list[tuple]) -> dict:

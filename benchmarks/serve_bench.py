@@ -44,6 +44,10 @@ MODEL_STEPS = {"dcgan64": 1, "dcgan128": 1, "unet_dec": 25}
 #: request set unfused, so the dispatch amortisation is visible per rev.
 SCAN_STEPS = 4
 
+#: snapshot cadence the model rows assume when pricing worst-case recovery
+#: (``serve_report(snapshot_every=...)``, DESIGN.md §11)
+MODEL_SNAPSHOT_EVERY = 4
+
 
 def _measured_rows(rows: list, smoke: bool) -> None:
     from repro.launch.serve_gen import GenServer
@@ -107,6 +111,85 @@ def _measured_rows(rows: list, smoke: bool) -> None:
                  f"p50_us={cm.np_percentile(lats, 50.0) * 1e6:.0f},"
                  f"p99_us={cm.np_percentile(lats, 99.0) * 1e6:.0f}"))
 
+    _fault_rows(rows, widths=widths, hw=hw, nz=nz, ngf=ngf, n_req=n_req,
+                steps=steps)
+
+
+def _fault_rows(rows: list, *, widths, hw, nz, ngf, n_req, steps) -> None:
+    """Fault-tolerance trajectory rows (DESIGN.md §11).
+
+    ``serve.recovery`` — a snapshotted drain is killed mid-flight and
+    restored; the column is the restore cost (checkpoint load + lane
+    rebuild + jit), the derived keys the recovered drain's throughput.  The
+    recovered images are asserted bitwise-equal to an uninterrupted drain —
+    the exact-resume acceptance bar, priced every revision.
+
+    ``serve.degraded`` — a persistent injected pallas failure forces the
+    retry ladder through backoff into per-lane xla fallback; the derived
+    keys are the degraded drain's throughput, the ``stats()`` counters
+    asserted to show exactly one degraded lane.
+    """
+    import tempfile
+
+    import numpy as np
+
+    from repro.distributed.fault_tolerance import failure_faults
+    from repro.launch.serve_gen import GenServer
+
+    # K=1 so the drain spans one tick per DDIM step — the kill tick must
+    # land mid-flight (a K=SCAN_STEPS smoke drain finishes in one tick)
+    kw = dict(batch=4, unet_widths=widths, unet_hw=hw, dcgan_nz=nz,
+              dcgan_ngf=ngf, scan_steps=1)
+
+    def _submit(server):
+        for i in range(n_req):
+            server.submit("unet_dec", steps=steps[i % len(steps)], seed=i)
+
+    ref = GenServer(**kw)
+    _submit(ref)
+    ref_imgs = ref.run()
+
+    with tempfile.TemporaryDirectory() as d:
+        inj = failure_faults(kill_at=2)
+        server = GenServer(snapshot_dir=d, snapshot_every=1, faults=inj, **kw)
+        _submit(server)
+        try:
+            server.run()
+            raise AssertionError("injected kill did not fire")
+        except RuntimeError:
+            pass
+        t0 = time.perf_counter()
+        restored = GenServer.restore(d)
+        restore_wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        imgs = restored.run()
+        drain_wall = time.perf_counter() - t0
+    assert sorted(imgs) == sorted(ref_imgs)
+    for rid in ref_imgs:        # exact resume: bitwise, not just close
+        assert np.array_equal(imgs[rid], ref_imgs[rid]), rid
+    st = restored.stats()
+    rows.append((
+        "serve.recovery", restore_wall * 1e6,
+        f"restore_us={restore_wall * 1e6:.0f},"
+        f"recovered_imgs_per_s={n_req / drain_wall:.2f},reqs={n_req},"
+        f"snapshot_every=1,snapshots={st['snapshots']:.0f},"
+        f"recoveries={st['recoveries']:.0f}"))
+
+    inj = failure_faults(backend_broken="pallas")
+    server = GenServer(**dict(kw, backend="pallas", interpret=True),
+                       faults=inj, max_retries=1, retry_backoff_s=1e-4)
+    _submit(server)
+    t0 = time.perf_counter()
+    imgs = server.run()
+    wall = time.perf_counter() - t0
+    st = server.stats()
+    assert len(imgs) == n_req and st["degraded"] >= 1, st
+    rows.append((
+        "serve.degraded", wall / max(st["device_steps"], 1) * 1e6,
+        f"degraded_imgs_per_s={n_req / wall:.2f},reqs={n_req},"
+        f"degraded={st['degraded']:.0f},retries={st['retries']:.0f},"
+        f"recoveries={st['recoveries']:.0f}"))
+
 
 def _model_rows(rows: list) -> None:
     for name, fn in GEN_WORKLOADS.items():
@@ -117,7 +200,8 @@ def _model_rows(rows: list) -> None:
         steps = MODEL_STEPS[name]
         scan = SCAN_STEPS if name == "unet_dec" else 1
         srv = cm.serve_report(layers, steps=steps, scan_steps=scan,
-                              steps_list=[steps] * 4)
+                              steps_list=[steps] * 4,
+                              snapshot_every=MODEL_SNAPSHOT_EVERY)
         base = cm.report(layers)
         ratio = srv["serve_speedup_vs_naive"] / base["speedup_vs_naive"]
         # acceptance bar: serving throughput ratio consistent with the
@@ -132,7 +216,8 @@ def _model_rows(rows: list) -> None:
             f"steps={steps},latency_ms={srv['latency_ms_ours']:.1f},"
             f"dispatches_per_image={srv['dispatches_per_image']:.0f},"
             f"model_p50_ms={srv['latency_p50_ms']:.1f},"
-            f"model_p99_ms={srv['latency_p99_ms']:.1f}"))
+            f"model_p99_ms={srv['latency_p99_ms']:.1f},"
+            f"recovery_ms_worst={srv['recovery_ms_worst']:.1f}"))
 
 
 def run(csv: bool = False, smoke: bool = False) -> list[tuple]:

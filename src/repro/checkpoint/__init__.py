@@ -1,4 +1,6 @@
-from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
+from repro.checkpoint.ckpt import (CheckpointFuture, all_steps, latest_step,
+                                   load_extra, load_flat, restore_checkpoint,
                                    save_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "all_steps",
+           "latest_step", "load_flat", "load_extra", "CheckpointFuture"]

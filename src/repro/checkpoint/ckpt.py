@@ -11,10 +11,19 @@ Restore is **elastic**: the manifest stores logical (global) shapes, restore
 re-shards onto whatever mesh/sharding the caller provides (different chip
 count than the writer is fine).  ``save_checkpoint(..., background=True)``
 runs serialization off the training thread; callers sync via the returned
-``threading.Thread`` (the train loop joins before the next save).
+:class:`CheckpointFuture`, whose ``join()`` **re-raises** any exception the
+background write hit — a failed serialization must surface as a loud crash
+at the next sync point, never as a silently missing step.
 
 Device->host transfer happens eagerly (cheap: addressable shards only); only
 file IO is deferred to the background thread.
+
+Beyond parameter trees, the layout doubles as the generic atomic snapshot
+transport for the serving layer (DESIGN.md §11): ``extra=`` attaches a
+JSON-serializable payload to the manifest (scheduler metadata), and a
+checkpoint saved from a *flat* ``{name: array}`` dict can be loaded back
+without an abstract tree via :func:`load_flat` — which is how
+``GenServer.snapshot`` / ``GenServer.restore`` move lane state.
 """
 
 from __future__ import annotations
@@ -55,9 +64,49 @@ def _from_serializable(arr: np.ndarray, dtype_str: str) -> np.ndarray:
     return arr
 
 
+class CheckpointFuture:
+    """Handle to a background checkpoint write.
+
+    ``join()`` blocks until the write finishes and **re-raises** any
+    exception it hit.  The pre-fix daemon-thread path printed the traceback
+    to stderr and dropped it: a full disk or doctored serializer lost the
+    step silently, and the train loop kept checkpoint-gating on a file that
+    did not exist.  Every sync point (the next save, the recovery path, the
+    end of training) now surfaces the failure instead.
+    """
+
+    def __init__(self, target):
+        self._exc: BaseException | None = None
+
+        def _run():
+            try:
+                target()
+            except BaseException as e:     # re-raised on join(), never lost
+                self._exc = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def join(self, timeout: float | None = None) -> None:
+        self._thread.join(timeout)
+        if self._exc is not None:
+            raise self._exc
+
+    def is_alive(self) -> bool:
+        return self._thread.is_alive()
+
+
 def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
-                    background: bool = False) -> threading.Thread | None:
-    """Save a pytree of (possibly sharded) jax arrays / numpy arrays."""
+                    background: bool = False,
+                    extra: dict | None = None) -> CheckpointFuture | None:
+    """Save a pytree of (possibly sharded) jax arrays / numpy arrays.
+
+    ``extra`` (JSON-serializable) rides in the manifest — scheduler/loop
+    metadata next to the array payload, read back via :func:`load_extra` or
+    :func:`load_flat`.  When ``tree`` is a flat ``{name: array}`` dict the
+    manifest also records the key order, so :func:`load_flat` can restore
+    it without an abstract tree.
+    """
     leaves, treedef = _flatten(tree)
     host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
     manifest = {
@@ -67,6 +116,14 @@ def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
         "dtypes": [str(l.dtype) for l in host_leaves],
         "process_count": jax.process_count(),
     }
+    if extra is not None:
+        manifest["extra"] = extra
+    if isinstance(tree, dict) and all(
+            not isinstance(v, (dict, list, tuple)) for v in tree.values()):
+        # flat dict of arrays: jax flattens by sorted key, record that order
+        # (a nested dict that happens to hold one leaf per top-level key
+        # must NOT qualify — its leaf order would not match the key list)
+        manifest["flat_keys"] = sorted(tree)
 
     def _write():
         final = os.path.join(directory, f"step_{step:06d}")
@@ -85,9 +142,7 @@ def save_checkpoint(directory: str, step: int, tree, *, keep: int = 3,
         _gc(directory, keep)
 
     if background:
-        t = threading.Thread(target=_write, daemon=True)
-        t.start()
-        return t
+        return CheckpointFuture(_write)
     _write()
     return None
 
@@ -115,6 +170,37 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def _read_manifest(directory: str, step: int) -> dict:
+    path = os.path.join(directory, f"step_{step:06d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+def load_extra(directory: str, step: int) -> dict | None:
+    """The manifest's ``extra`` payload (or None if the save had none)."""
+    return _read_manifest(directory, step).get("extra")
+
+
+def load_flat(directory: str, step: int) -> tuple[dict, dict | None]:
+    """Load a checkpoint saved from a flat ``{name: array}`` dict.
+
+    Returns ``(arrays, extra)`` — no abstract tree needed: the manifest
+    recorded the key order at save time.  This is the transport the serving
+    layer's lane snapshots use (DESIGN.md §11).
+    """
+    manifest = _read_manifest(directory, step)
+    keys = manifest.get("flat_keys")
+    if keys is None:
+        raise ValueError(
+            f"checkpoint at step {step} was not saved from a flat dict "
+            f"(no flat_keys in manifest); use restore_checkpoint")
+    path = os.path.join(directory, f"step_{step:06d}")
+    data = np.load(os.path.join(path, f"host_{jax.process_index():03d}.npz"))
+    arrays = {k: _from_serializable(data[_key(i)], manifest["dtypes"][i])
+              for i, k in enumerate(keys)}
+    return arrays, manifest.get("extra")
+
+
 def restore_checkpoint(directory: str, step: int, abstract_tree,
                        shardings=None):
     """Restore into the structure of ``abstract_tree``.
@@ -123,8 +209,7 @@ def restore_checkpoint(directory: str, step: int, abstract_tree,
     device_put with them (elastic re-shard onto the current mesh).
     """
     path = os.path.join(directory, f"step_{step:06d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _read_manifest(directory, step)
     data = np.load(os.path.join(path, f"host_{jax.process_index():03d}.npz"))
     leaves, treedef = _flatten(abstract_tree)
     assert len(leaves) == len(manifest["shapes"]), "tree structure changed"

@@ -314,7 +314,8 @@ def report(layers: list[ConvLayer]) -> dict[str, float]:
 def serve_report(layers: list[ConvLayer], *, steps: int = 1,
                  batch: int = 1, scan_steps: int = 1,
                  steps_list: list[int] | None = None, calibration=None,
-                 backend: str = "xla") -> dict[str, float]:
+                 backend: str = "xla",
+                 snapshot_every: int = 0) -> dict[str, float]:
     """Steady-state serving cost of an iterative sampler on the array.
 
     One served image costs ``steps`` full passes over the workload's layer
@@ -345,6 +346,14 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
     latency-percentile keys ``latency_p50_ms`` / ``latency_p99_ms`` from
     :func:`serve_percentiles` — the deterministic continuous-batching drain
     model of DESIGN.md §9.
+
+    ``snapshot_every`` (the serving loop's snapshot cadence, DESIGN.md §11)
+    adds the worst-case recovery cost: a crash lands just before the next
+    snapshot, so recovery replays ``snapshot_every`` full ticks — each one
+    fused dispatch of ``batch x scan_steps`` passes.  Reported as
+    ``recovery_ticks_worst`` / ``recovery_ms_worst`` (array cycles) and,
+    with a calibration, ``calibrated_recovery_us_worst`` (this host's wall
+    time, dispatch overhead included).
     """
     if steps < 1 or batch < 1 or scan_steps < 1:
         raise ValueError(
@@ -379,6 +388,12 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
         "images_per_s_naive": FREQ_HZ / naive,
         "serve_speedup_vs_naive": naive / ours,
     }
+    if snapshot_every > 0:
+        # worst case: the crash lands one tick short of the next snapshot,
+        # so snapshot_every ticks of batch x scan_steps passes replay
+        tick_cycles = batch * scan_steps * base["our_cycles"]
+        out["recovery_ticks_worst"] = float(snapshot_every)
+        out["recovery_ms_worst"] = 1e3 * snapshot_every * tick_cycles / FREQ_HZ
     if calibration is not None:
         split = calibration.predict_layers_split(layers, backend=backend)
         if split is not None:
@@ -386,6 +401,9 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
             us = steps * compute_us + dispatches * dispatch_us
             out["calibrated_us_per_image"] = us
             out["calibrated_images_per_s"] = 1e6 / us if us else 0.0
+            if snapshot_every > 0:
+                tick_us = batch * scan_steps * compute_us + dispatch_us
+                out["calibrated_recovery_us_worst"] = snapshot_every * tick_us
     if steps_list:
         pct = serve_percentiles(layers, steps_list, batch=batch,
                                 scan_steps=scan_steps,

@@ -1,17 +1,37 @@
-"""Fault tolerance: heartbeats, straggler watchdog, restart controller.
+"""Fault tolerance: heartbeats, straggler watchdog, tick-level fault plane.
 
 On a real fleet the heartbeat file is a distributed KV entry and the restart
 controller is the job scheduler; the *logic* — detect, checkpoint-restore,
 re-shard, resume at the exact step with the exact data stream — is what this
-module implements and what the failure-injection tests exercise.
+module implements and what the chaos drills (``tests/test_chaos.py``,
+``tests/test_fault_tolerance.py``) exercise.
+
+:class:`FailureInjector` is the chaos plane shared by the serving and
+training loops (DESIGN.md §11): a list of :class:`Fault` descriptors, each
+scheduled at a tick/step (or armed on every tick), consumed by the loop at
+well-defined points:
+
+* ``kill``    — raised outside any recovery machinery: simulates the host
+  process dying (the snapshot/restore drills drive this);
+* ``raise``   — raised inside the dispatch path, where the serving loop's
+  retry/backoff/degrade ladder sees it (optionally conditioned on the
+  lane's current ``backend``, so a "pallas is broken" fault stops firing
+  once the lane degrades to xla);
+* ``corrupt`` — poisons one lane slot's image state with NaNs; the server
+  detects the non-finite sample at completion and re-runs the request;
+* ``slow``    — stalls the tick by ``seconds`` inside the timed window, so
+  the :class:`StragglerWatchdog` observes it.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import re
 import time
 from dataclasses import dataclass, field
+
+_HEART_RE = re.compile(r"heartbeat_(\d+)\.json(\.tmp)?")
 
 
 class Heartbeat:
@@ -29,18 +49,36 @@ class Heartbeat:
 
     @staticmethod
     def dead_hosts(path: str, timeout_s: float) -> list[int]:
+        """Hosts without a fresh, *readable* heartbeat.
+
+        A host is alive only if it can prove it: a heartbeat that is
+        truncated, corrupt, unreadable, or still a ``.tmp`` (crash inside
+        the atomic-rename window) proves nothing, so such a host is
+        reported dead rather than crashing the monitor — the monitor is
+        the component that must survive everyone else's failures.
+        """
         now = time.time()
-        dead = []
         if not os.path.isdir(path):
-            return dead
+            return []
+        seen: set[int] = set()
+        alive: set[int] = set()
         for name in sorted(os.listdir(path)):
-            if not name.startswith("heartbeat_"):
+            m = _HEART_RE.fullmatch(name)
+            if m is None:
                 continue
-            with open(os.path.join(path, name)) as f:
-                hb = json.load(f)
-            if now - hb["time"] > timeout_s:
-                dead.append(int(name.split("_")[1].split(".")[0]))
-        return dead
+            host = int(m.group(1))
+            seen.add(host)
+            if m.group(2):          # .tmp mid-rename: not a liveness proof
+                continue
+            try:
+                with open(os.path.join(path, name)) as f:
+                    hb = json.load(f)
+                fresh = now - float(hb["time"]) <= timeout_s
+            except (OSError, ValueError, KeyError, TypeError):
+                continue            # unreadable/corrupt: cannot prove alive
+            if fresh:
+                alive.add(host)
+        return sorted(seen - alive)
 
 
 @dataclass
@@ -48,7 +86,8 @@ class StragglerWatchdog:
     """EWMA step-time monitor; flags steps slower than ``threshold`` x EWMA.
 
     On a fleet the flag triggers hot-spare swap / re-shard; here it feeds the
-    training log and the fault-tolerance tests.
+    training log, the serving loop's stuck-tick shedding ladder
+    (DESIGN.md §11), and the fault-tolerance tests.
     """
 
     alpha: float = 0.1
@@ -72,14 +111,98 @@ class StragglerWatchdog:
         return slow
 
 
-class FailureInjector:
-    """Deterministically raise at a given step (tests / chaos drills)."""
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault (see module docstring for kind semantics).
 
-    def __init__(self, fail_at_steps: set[int]):
+    ``at`` is the scheduler tick / train step the fault arms at; ``None``
+    arms it on *every* tick (a persistent failure).  ``target`` restricts a
+    serving fault to one lane (workload name); ``backend`` restricts it to
+    lanes currently dispatching on that backend — the handle that lets a
+    degraded lane escape a persistent backend fault.  ``once`` faults
+    disarm after their first firing (transient failures); persistent
+    faults (``once=False``) re-fire until their condition stops matching.
+    """
+    at: int | None
+    kind: str = "raise"         # kill | raise | corrupt | slow
+    target: str | None = None   # lane workload (serving faults)
+    slot: int = 0               # corrupt: which lane slot to poison
+    seconds: float = 0.0        # slow: injected stall inside the tick
+    backend: str | None = None  # raise: only fire on this lane backend
+    once: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("kill", "raise", "corrupt", "slow"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class FailureInjector:
+    """Deterministic tick-level fault plane (tests / chaos drills).
+
+    Constructed either the seed way — ``FailureInjector({12})`` raises at
+    step 12, the training loop's original contract — or with explicit
+    :class:`Fault` descriptors via ``faults=``.  Loops consume faults at
+    their injection points with :meth:`take`; a consumed ``once`` fault
+    never fires again.
+    """
+
+    def __init__(self, fail_at_steps: set[int] | tuple = (),
+                 faults: tuple[Fault, ...] | list = ()):
         self.fail_at = set(fail_at_steps)
-        self.fired: set[int] = set()
+        self.faults: list[Fault] = [Fault(at=s, kind="raise")
+                                    for s in sorted(self.fail_at)]
+        self.faults += list(faults)
+        self.fired: list[Fault] = []
+
+    def take(self, step: int, *, kind: str, target: str | None = None,
+             backend: str | None = None) -> list[Fault]:
+        """Arm-and-consume the ``kind`` faults matching this tick.
+
+        ``target``/``backend`` describe the *consumer* (the lane asking);
+        a fault with a ``None`` field matches any consumer.
+        """
+        hits = []
+        for f in self.faults:
+            if f.kind != kind:
+                continue
+            if f.at is not None and f.at != step:
+                continue
+            if f.target is not None and target is not None \
+                    and f.target != target:
+                continue
+            if f.backend is not None and backend is not None \
+                    and f.backend != backend:
+                continue
+            if f.once and f in self.fired:
+                continue
+            self.fired.append(f)
+            hits.append(f)
+        return hits
 
     def maybe_fail(self, step: int) -> None:
-        if step in self.fail_at and step not in self.fired:
-            self.fired.add(step)
-            raise RuntimeError(f"injected node failure at step {step}")
+        """Raise if a ``raise``/``kill`` fault is scheduled at ``step`` —
+        the training loop's injection point (both kinds land in its
+        checkpoint-restore-resume path)."""
+        for kind in ("raise", "kill"):
+            if self.take(step, kind=kind):
+                raise RuntimeError(f"injected node failure at step {step}")
+
+    def sleep_faults(self, step: int) -> float:
+        """Total injected stall (s) scheduled at ``step``; consumes them."""
+        return sum(f.seconds for f in self.take(step, kind="slow"))
+
+
+def failure_faults(*, kill_at: int | None = None,
+                   backend_broken: str | None = None) -> FailureInjector:
+    """The two canonical chaos recipes, pre-packaged for drills and the
+    serving benchmark: ``kill_at`` schedules process death at that tick
+    (recovery = snapshot restore); ``backend_broken`` arms a persistent
+    dispatch failure for lanes on that backend — it keeps firing until the
+    lane degrades off the backend, at which point it stops matching."""
+    faults: list[Fault] = []
+    if kill_at is not None:
+        faults.append(Fault(at=kill_at, kind="kill"))
+    if backend_broken is not None:
+        faults.append(Fault(at=None, kind="raise", backend=backend_broken,
+                            once=False))
+    return FailureInjector(faults=faults)

@@ -30,6 +30,23 @@ shrinks its device batch between compiled sizes as its backlog moves
 (``jax.jit`` caches one executable per batch shape, so revisited sizes
 redispatch without recompiling).
 
+The server is fault-tolerant (DESIGN.md §11).  Every ``snapshot_every``
+ticks (and on demand via :meth:`GenServer.snapshot`) the full
+scheduler-visible state — per-slot image tensors, trajectory cursors,
+per-request seeds and SLO metadata, the admission queue, and completed
+results — is written through the atomic manifest+COMMITTED checkpoint
+layout (``repro.checkpoint``); :meth:`GenServer.restore` resumes a killed
+drain mid-flight, and because the mixed-timestep step is timestep-*data*
+driven the recovered drain is bitwise-identical on xla to an uninterrupted
+run.  A dispatch that raises retries with exponential backoff, then the
+lane *degrades* in place to the xla engine (the dispatcher routes both)
+instead of killing the server; corrupted slots are detected by a
+completion-time finiteness check and re-run from their seed; repeated
+stuck-tick flags from a :class:`StragglerWatchdog` shed the
+lowest-priority pending class first.  ``faults=`` accepts a
+:class:`repro.distributed.fault_tolerance.FailureInjector` so chaos drills
+drive all of these paths deterministically.
+
 This mirrors the LM path (``repro.launch.serve``): the scheduler is
 host-side and dumb, the device step is pure and compiled once.  The image
 state takes its sharding from :func:`repro.distributed.sharding.image_sharding`
@@ -54,9 +71,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import checkpoint as ckpt
 from repro.core import cycle_model as cm
 from repro.core.gen_spec import GEN_WORKLOADS, UNET_WIDTHS
 from repro.distributed import sharding as shd
+from repro.distributed.fault_tolerance import (FailureInjector,
+                                               StragglerWatchdog)
 from repro.launch.steps import (DDIM_T_MAX, ddim_timesteps,
                                 make_gen_scan_step)
 from repro.models import dcgan, unet_decoder
@@ -162,11 +182,15 @@ class GenRequest:
     done_wall: float = 0.0
     result: np.ndarray | None = None
     # lifecycle: pending -> active -> done, or a terminal non-result state
-    # (cancelled / timeout / shed) — terminal states never hold a result
+    # (cancelled / timeout / shed / corrupt) — terminal states never hold a
+    # result
     status: str = "pending"
     # calibrated host-time admission estimate (us) for the whole request, or
     # None when the server has no calibration fitted for this layer mix
     est_us: float | None = None
+    # completion-time corruption detections that sent this request back to
+    # the queue for a clean re-run (bounded by the server's max_requeues)
+    requeues: int = 0
 
     @property
     def wait_ticks(self) -> int:
@@ -192,6 +216,8 @@ class GenRequest:
 class _DiffusionLane:
     """Resizable batch of diffusion slots over one compiled K-step scan."""
 
+    kind = "diffusion"
+
     def __init__(self, params: dict, *, batch: int, widths: tuple[int, ...],
                  hw: int, out_ch: int, backend: str,
                  interpret: bool | None, decomposed: bool, mesh=None,
@@ -200,6 +226,8 @@ class _DiffusionLane:
         self.image_shape = (size, size, out_ch)
         self.params = params
         self.scan_steps = scan_steps
+        self.backend = backend
+        self.decomposed, self.interpret = decomposed, interpret
         self.mesh, self.spatial = mesh, spatial
         self._raw_step = make_gen_scan_step(scan_steps, decomposed=decomposed,
                                             backend=backend,
@@ -210,6 +238,36 @@ class _DiffusionLane:
         self.substeps = 0           # active trajectory steps actually taken
         self.compiled_sizes: set[int] = set()
         self._alloc(batch)
+
+    def set_backend(self, backend: str) -> None:
+        """Swap the dispatch backend in place (graceful degradation,
+        DESIGN.md §11): the compiled step is rebuilt, every slot's image
+        state, trajectory cursor, and request stay exactly where they are —
+        the DDIM update is backend-invariant data flow, so a degraded lane
+        continues the same trajectories on the fallback engine."""
+        if backend == self.backend:
+            return
+        self.backend = backend
+        self._raw_step = make_gen_scan_step(
+            self.scan_steps, decomposed=self.decomposed, backend=backend,
+            interpret=self.interpret)
+        self._step, _ = self._jit_step(self.batch)
+        self.compiled_sizes = set()
+
+    def corrupt(self, slot: int) -> None:
+        """Chaos hook: poison one slot's image state with NaNs (the
+        completion-time finiteness check must catch and re-run it)."""
+        self.x = self.x.at[slot % self.batch].set(jnp.nan)
+
+    def state_arrays(self) -> dict[str, np.ndarray]:
+        """Device state for a lane snapshot (everything non-reconstructible:
+        slot metadata travels in the manifest extra instead)."""
+        return {"x": np.asarray(self.x)}
+
+    def load_state(self, arrays: dict[str, np.ndarray]) -> None:
+        x = jnp.asarray(arrays["x"])
+        self.x = x if self.mesh is None else jax.device_put(
+            x, shd.image_sharding(self.mesh, x.shape, spatial=self.spatial))
 
     def _jit_step(self, batch: int):
         """One jitted K-step scan per mesh sharding; ``jax.jit`` itself
@@ -329,10 +387,15 @@ class _DCGANLane:
     dispatch count pinned in ``tests/test_serve_gen.py``).
     """
 
+    kind = "dcgan"
+    scan_steps = 1
+
     def __init__(self, params: dict, *, batch: int, nz: int, backend: str,
                  interpret: bool | None, decomposed: bool):
         self.params = params
         self.nz = nz
+        self.backend = backend
+        self.decomposed, self.interpret = decomposed, interpret
         self._step = jax.jit(functools.partial(
             dcgan.forward, decomposed=decomposed, backend=backend,
             interpret=interpret))
@@ -340,6 +403,24 @@ class _DCGANLane:
         self.substeps = 0
         self.compiled_sizes: set[int] = set()
         self._alloc(batch)
+
+    def set_backend(self, backend: str) -> None:
+        if backend == self.backend:
+            return
+        self.backend = backend
+        self._step = jax.jit(functools.partial(
+            dcgan.forward, decomposed=self.decomposed, backend=backend,
+            interpret=self.interpret))
+        self.compiled_sizes = set()
+
+    def corrupt(self, slot: int) -> None:
+        self.z = self.z.at[slot % self.batch].set(jnp.nan)
+
+    def state_arrays(self) -> dict[str, np.ndarray]:
+        return {"z": np.asarray(self.z)}
+
+    def load_state(self, arrays: dict[str, np.ndarray]) -> None:
+        self.z = jnp.asarray(arrays["z"])
 
     def _alloc(self, batch: int) -> None:
         self.batch = batch
@@ -433,6 +514,20 @@ class GenServer:
     backlog.  ``params`` overrides model parameters per workload name
     (tests and the smoke paths pass tiny-width denoisers); otherwise lanes
     initialise canonical-width parameters from ``param_seed``.
+
+    **Fault tolerance** (DESIGN.md §11): a lane dispatch that raises is
+    retried ``max_retries`` times with exponential backoff starting at
+    ``retry_backoff_s``; a lane still failing on a non-xla backend then
+    *degrades* in place to xla and keeps its trajectories.  Results are
+    finiteness-checked at completion; a corrupted sample re-runs from its
+    seed (at most ``max_requeues`` times, then status ``"corrupt"``).
+    ``watchdog`` (a :class:`StragglerWatchdog`) flags stuck ticks;
+    ``stuck_shed_after`` consecutive flags shed the lowest-priority pending
+    class.  With ``snapshot_dir`` set, :meth:`snapshot` checkpoints the
+    full scheduler state (auto every ``snapshot_every`` ticks) and
+    :meth:`restore` resumes a killed drain exactly.  ``faults`` accepts a
+    :class:`FailureInjector` whose scheduled faults the tick loop consumes
+    at fixed points, so chaos drills are deterministic.
     """
 
     def __init__(self, *, batch: int = 4, backend: str = "xla",
@@ -444,7 +539,13 @@ class GenServer:
                  calibration=None, scan_steps: int | str = 1,
                  autoscale: bool = False, min_batch: int = 1,
                  max_batch: int | None = None, shrink_patience: int = 2,
-                 starvation_ticks: int = DEFAULT_STARVATION_TICKS):
+                 starvation_ticks: int = DEFAULT_STARVATION_TICKS,
+                 faults: FailureInjector | None = None,
+                 watchdog: StragglerWatchdog | None = None,
+                 max_retries: int = 3, retry_backoff_s: float = 0.05,
+                 stuck_shed_after: int = 3, max_requeues: int = 1,
+                 snapshot_dir: str | None = None, snapshot_every: int = 0,
+                 snapshot_keep: int = 3):
         if isinstance(scan_steps, str):
             if scan_steps != "auto":
                 raise ValueError(
@@ -469,6 +570,21 @@ class GenServer:
         self.max_batch = max(batch, max_batch or batch * 4)
         self.shrink_patience = shrink_patience
         self.starvation_ticks = starvation_ticks
+        self.faults = faults
+        self.watchdog = watchdog
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.stuck_shed_after = max(1, stuck_shed_after)
+        self.max_requeues = max_requeues
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.snapshot_keep = snapshot_keep
+        # fault-tolerance counters (surfaced by stats(), DESIGN.md §11)
+        self._degraded: dict[str, str] = {}   # workload -> fallback backend
+        self._retries = 0
+        self._recoveries = 0
+        self._snapshots = 0
+        self._stuck = 0                       # consecutive stuck-tick flags
         self._lanes: dict[str, _DiffusionLane | _DCGANLane] = {}
         self._idle_ticks: dict[str, int] = {}
         self._pending: list[GenRequest] = []
@@ -513,30 +629,42 @@ class GenServer:
                                      backend=self.backend, batch=self.batch)
         return int(self.scan_steps)
 
-    def _lane(self, workload: str):
+    def _init_params(self, workload: str) -> dict:
+        """Lane parameters: the per-workload override if given, else a
+        deterministic init from ``param_seed`` (also the structural template
+        restore() unflattens snapshotted parameter leaves into)."""
+        if workload == "unet_dec":
+            return self._params.get(workload) or \
+                unet_decoder.init_denoiser_params(
+                    jax.random.PRNGKey(self._param_seed),
+                    widths=self.unet_widths, out_ch=self.out_ch)
+        if workload in ("dcgan64", "dcgan128"):
+            return self._params.get(workload) or dcgan.init_params(
+                jax.random.PRNGKey(self._param_seed), size=int(workload[5:]),
+                nz=self.dcgan_nz, ngf=self.dcgan_ngf, out_ch=self.out_ch)
+        raise ValueError(f"unknown workload {workload!r}; "
+                         f"known: {sorted(GEN_WORKLOADS)}")
+
+    def _lane(self, workload: str, *, batch: int | None = None,
+              scan_steps: int | None = None):
+        """The lane for ``workload``, built on first use.  ``batch`` /
+        ``scan_steps`` override the configured sizing — restore() passes the
+        snapshotted values so a recovered lane compiles the exact geometry
+        that was running."""
         lane = self._lanes.get(workload)
         if lane is not None:
             return lane
+        p = self._init_params(workload)
         kw = dict(backend=self.backend, interpret=self.interpret,
-                  decomposed=self.decomposed)
+                  decomposed=self.decomposed, batch=batch or self.batch)
         if workload == "unet_dec":
-            p = self._params.get(workload) or unet_decoder.init_denoiser_params(
-                jax.random.PRNGKey(self._param_seed), widths=self.unet_widths,
-                out_ch=self.out_ch)
-            lane = _DiffusionLane(p, batch=self.batch, widths=self.unet_widths,
-                                  hw=self.unet_hw, out_ch=self.out_ch,
-                                  mesh=self.mesh, spatial=self.spatial,
-                                  scan_steps=self._lane_scan_steps(workload),
-                                  **kw)
-        elif workload in ("dcgan64", "dcgan128"):
-            size = int(workload[5:])
-            p = self._params.get(workload) or dcgan.init_params(
-                jax.random.PRNGKey(self._param_seed), size=size,
-                nz=self.dcgan_nz, ngf=self.dcgan_ngf, out_ch=self.out_ch)
-            lane = _DCGANLane(p, batch=self.batch, nz=self.dcgan_nz, **kw)
+            lane = _DiffusionLane(
+                p, widths=self.unet_widths, hw=self.unet_hw,
+                out_ch=self.out_ch, mesh=self.mesh, spatial=self.spatial,
+                scan_steps=(scan_steps if scan_steps is not None
+                            else self._lane_scan_steps(workload)), **kw)
         else:
-            raise ValueError(f"unknown workload {workload!r}; "
-                             f"known: {sorted(GEN_WORKLOADS)}")
+            lane = _DCGANLane(p, nz=self.dcgan_nz, **kw)
         self._lanes[workload] = lane
         self._idle_ticks[workload] = 0
         return lane
@@ -596,7 +724,7 @@ class GenServer:
         """
         req = self._requests.get(rid)
         if req is None or req.status in ("done", "cancelled", "timeout",
-                                         "shed"):
+                                         "shed", "corrupt"):
             return False
         if req.status == "pending":
             self._pending.remove(req)
@@ -671,27 +799,122 @@ class GenServer:
             else:
                 self._idle_ticks[workload] = 0
 
+    # ------------------------------------------------------ fault handling --
+    def _lane_tick(self, workload: str, lane) -> list[GenRequest]:
+        """One lane dispatch behind the retry/degrade ladder (DESIGN.md §11).
+
+        A raise is retried up to ``max_retries`` times with exponential
+        backoff; a lane that keeps failing on a non-xla backend then
+        degrades in place to xla (``set_backend`` keeps every trajectory
+        where it is) and the ladder restarts on the fallback engine.  An
+        xla lane that exhausts its retries propagates — there is no lower
+        rung.  Injected ``raise`` faults fire *before* the device call, so
+        a retried tick re-enters with untouched lane state (matching the
+        real failure mode: pallas errors surface at trace/lower/launch
+        time, before the donated image buffer is consumed).
+        """
+        backoff = self.retry_backoff_s
+        attempts, failed = 0, False
+        while True:
+            try:
+                if self.faults is not None and self.faults.take(
+                        self._tick, kind="raise", target=workload,
+                        backend=lane.backend):
+                    raise RuntimeError(
+                        f"injected {lane.backend} dispatch failure on lane "
+                        f"{workload!r} at tick {self._tick}")
+                done = lane.tick()
+            except Exception:
+                failed = True
+                attempts += 1
+                if attempts <= self.max_retries:
+                    self._retries += 1
+                    if backoff > 0:
+                        time.sleep(backoff)
+                    backoff *= 2
+                    continue
+                if lane.backend != "xla":
+                    lane.set_backend("xla")
+                    self._degraded[workload] = "xla"
+                    attempts, backoff = 0, self.retry_backoff_s
+                    continue
+                raise
+            if failed:
+                self._recoveries += 1
+            return done
+
+    def _result_ok(self, req: GenRequest) -> bool:
+        """Completion-time corruption gate: a non-finite sample is never
+        surfaced.  The request re-runs from its seed (bitwise-correct on a
+        clean pass) up to ``max_requeues`` times, then lands terminal as
+        ``"corrupt"``."""
+        if req.result is not None and np.isfinite(req.result).all():
+            return True
+        req.result = None
+        if req.requeues < self.max_requeues:
+            req.requeues += 1
+            req.status = "pending"
+            req.admit_tick = -1
+            self._pending.append(req)
+            self._recoveries += 1
+        else:
+            req.status = "corrupt"
+        return False
+
+    def _shed_lowest_class(self) -> None:
+        """Stuck-tick load shedding: drop every *pending* request of the
+        lowest-priority class present (highest SLO rank) — the PR-7 ladder
+        applied as back-pressure relief.  In-flight work is never shed."""
+        if not self._pending:
+            return
+        worst = max(r.slo.rank for r in self._pending)
+        for req in [r for r in self._pending if r.slo.rank == worst]:
+            self._pending.remove(req)
+            req.status = "shed"
+
     def step(self) -> list[GenRequest]:
-        """One scheduler tick; returns the requests completed by it."""
+        """One scheduler tick; returns the requests completed by it.
+
+        Fault-plane injection points, in tick order: ``kill`` (raised
+        before any state mutates — simulates the process dying; recovery
+        is :meth:`restore` from the last snapshot), ``slow`` (stall inside
+        the timed window, seen by the watchdog), ``corrupt`` (poisons a
+        lane slot, caught by the completion gate), ``raise`` (inside
+        :meth:`_lane_tick`'s retry/degrade ladder).
+        """
         t_start = time.perf_counter()
         if self._t0 is None:
             self._t0 = t_start
+        inj = self.faults
+        if inj is not None and inj.take(self._tick, kind="kill"):
+            raise RuntimeError(f"injected server kill at tick {self._tick}")
         self._expire()
         if self.autoscale:
             self._autoscale()
         self._admit()
+        if inj is not None:
+            stall = inj.sleep_faults(self._tick)
+            if stall > 0:
+                time.sleep(stall)
+            for f in inj.take(self._tick, kind="corrupt"):
+                lane = (self._lanes.get(f.target) if f.target is not None
+                        else next((l for l in self._lanes.values()
+                                   if l.busy), None))
+                if lane is not None:
+                    lane.corrupt(f.slot)
         done: list[GenRequest] = []
         dispatches = substeps = 0
         cold = False
-        for lane in self._lanes.values():
+        for workload, lane in self._lanes.items():
             if lane.busy:
                 cold = cold or lane.batch not in lane.compiled_sizes
                 sub0 = lane.substeps
-                done.extend(lane.tick())
+                done.extend(self._lane_tick(workload, lane))
                 dispatches += 1
                 substeps += lane.substeps - sub0
         self._tick += 1
         t_end = time.perf_counter()
+        done = [r for r in done if self._result_ok(r)]
         for req in done:
             req.done_tick = self._tick
             req.done_wall = t_end
@@ -699,6 +922,15 @@ class GenServer:
             self._done[req.rid] = req
         self._tick_log.append(
             (t_end - t_start, dispatches, len(done), substeps, cold))
+        if self.watchdog is not None and dispatches:
+            self._stuck = (self._stuck + 1 if self.watchdog.observe(
+                self._tick - 1, t_end - t_start) else 0)
+            if self._stuck >= self.stuck_shed_after:
+                self._shed_lowest_class()
+                self._stuck = 0
+        if (self.snapshot_dir is not None and self.snapshot_every > 0
+                and self._tick % self.snapshot_every == 0):
+            self.snapshot()
         return done
 
     def run(self) -> dict[int, np.ndarray]:
@@ -708,6 +940,185 @@ class GenServer:
         while self._pending or any(l.busy for l in self._lanes.values()):
             self.step()
         return {rid: r.result for rid, r in sorted(self._done.items())}
+
+    # ---------------------------------------------------- snapshot/restore --
+    _CONFIG_ATTRS = ("batch", "backend", "interpret", "decomposed", "spatial",
+                     "unet_hw", "out_ch", "dcgan_nz", "dcgan_ngf",
+                     "scan_steps", "autoscale", "min_batch", "max_batch",
+                     "shrink_patience", "starvation_ticks", "max_retries",
+                     "retry_backoff_s", "stuck_shed_after", "max_requeues",
+                     "snapshot_every", "snapshot_keep")
+
+    def _snapshot_config(self) -> dict:
+        cfg = {k: getattr(self, k) for k in self._CONFIG_ATTRS}
+        cfg["unet_widths"] = list(self.unet_widths)
+        cfg["param_seed"] = self._param_seed
+        return cfg
+
+    @staticmethod
+    def _req_meta(req: GenRequest) -> dict:
+        """JSON form of everything about a request except its image payload
+        (results ride as ``done:<rid>`` arrays; in-flight image state lives
+        in the lane arrays).  Wall-clock fields are deliberately absent:
+        ``perf_counter`` is process-relative, so restore() re-bases every
+        live request to one common "now" — deadline order within a class
+        falls back to rid, which *is* arrival order."""
+        return {"rid": req.rid, "workload": req.workload, "steps": req.steps,
+                "seed": req.seed, "submit_tick": req.submit_tick,
+                "slo": {"name": req.slo.name, "rank": req.slo.rank,
+                        "target_us": req.slo.target_us,
+                        "timeout_ticks": req.slo.timeout_ticks},
+                "timeout_ticks": req.timeout_ticks,
+                "admit_tick": req.admit_tick, "done_tick": req.done_tick,
+                "status": req.status, "est_us": req.est_us,
+                "requeues": req.requeues}
+
+    @staticmethod
+    def _req_from_meta(m: dict, now: float) -> GenRequest:
+        s = m["slo"]
+        req = GenRequest(m["rid"], m["workload"], m["steps"], m["seed"],
+                         m["submit_tick"],
+                         slo=SLOClass(s["name"], s["rank"],
+                                      target_us=s["target_us"],
+                                      timeout_ticks=s["timeout_ticks"]),
+                         timeout_ticks=m["timeout_ticks"])
+        req.submit_wall = now
+        req.admit_tick = m["admit_tick"]
+        req.done_tick = m["done_tick"]
+        req.status = m["status"]
+        req.est_us = m["est_us"]
+        req.requeues = m["requeues"]
+        if req.status == "done":
+            req.done_wall = now
+        return req
+
+    def snapshot(self, directory: str | None = None) -> str:
+        """Checkpoint the full scheduler-visible state atomically.
+
+        Everything a restored server needs to finish the drain exactly —
+        per-slot image tensors and lane parameters (arrays), trajectory
+        cursors, request/SLO metadata, the admission queue, completed
+        results, and the fault-tolerance counters (manifest ``extra``) —
+        goes through the ``repro.checkpoint`` manifest+COMMITTED layout, so
+        a crash mid-snapshot leaves the previous snapshot intact.
+        """
+        directory = directory or self.snapshot_dir
+        if directory is None:
+            raise ValueError("snapshot() needs a directory argument or a "
+                             "server constructed with snapshot_dir=")
+        arrays: dict[str, np.ndarray] = {}
+        lanes_meta: dict[str, dict] = {}
+        for wl, lane in self._lanes.items():
+            lm = {"kind": lane.kind, "batch": lane.batch,
+                  "backend": lane.backend, "scan_steps": lane.scan_steps,
+                  "device_steps": lane.device_steps,
+                  "substeps": lane.substeps,
+                  "idle_ticks": self._idle_ticks[wl],
+                  "slots": [None if s is None else self._req_meta(s)
+                            for s in lane.slots]}
+            if lane.kind == "diffusion":
+                lm["pos"] = [int(p) for p in lane._pos]
+            lanes_meta[wl] = lm
+            for k, v in lane.state_arrays().items():
+                arrays[f"lane:{wl}:{k}"] = v
+            leaves, _ = jax.tree_util.tree_flatten(lane.params)
+            for i, leaf in enumerate(leaves):
+                arrays[f"param:{wl}:{i:05d}"] = np.asarray(
+                    jax.device_get(leaf))
+        done_meta, dropped_meta = [], []
+        for req in self._requests.values():
+            if req.status == "done":
+                done_meta.append(self._req_meta(req))
+                arrays[f"done:{req.rid:08d}"] = req.result
+            elif req.status in ("cancelled", "timeout", "shed", "corrupt"):
+                dropped_meta.append(self._req_meta(req))
+        meta = {"tick": self._tick, "next_rid": self._next_rid,
+                "config": self._snapshot_config(), "lanes": lanes_meta,
+                "pending": [self._req_meta(r) for r in self._pending],
+                "done": done_meta, "dropped": dropped_meta,
+                "degraded": dict(self._degraded), "retries": self._retries,
+                "recoveries": self._recoveries,
+                "snapshots": self._snapshots + 1}
+        ckpt.save_checkpoint(directory, self._tick, arrays,
+                             keep=self.snapshot_keep, extra=meta)
+        self._snapshots += 1
+        return directory
+
+    @classmethod
+    def restore(cls, directory: str, *, step: int | None = None,
+                **overrides) -> "GenServer":
+        """Rebuild a server from the latest (or given) snapshot and resume.
+
+        The drain continues exactly where the snapshot left it: because the
+        mixed-timestep scan is timestep-*data* driven and the image state
+        round-trips bitwise through the checkpoint, a restored drain on xla
+        reproduces the uninterrupted run sample-for-sample (pinned in
+        ``tests/test_chaos.py``).  Work that completed *after* the snapshot
+        in the killed process is simply recomputed — deterministically, to
+        the same images.  ``overrides`` are constructor keywords (pass
+        ``calibration=``/``mesh=``/``faults=`` here; they are not
+        serialized).
+        """
+        if step is None:
+            step = ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed snapshot under {directory!r}")
+        arrays, meta = ckpt.load_flat(directory, step)
+        cfg = dict(meta["config"])
+        cfg["unet_widths"] = tuple(cfg["unet_widths"])
+        kw = dict(cfg, snapshot_dir=directory)
+        kw.update(overrides)
+        server = cls(**kw)
+        now = time.perf_counter()
+        server._tick = meta["tick"]
+        server._next_rid = meta["next_rid"]
+        server._degraded = dict(meta["degraded"])
+        server._retries = meta["retries"]
+        server._recoveries = meta["recoveries"] + 1  # this restore is one
+        server._snapshots = meta["snapshots"]
+        for wl, lm in meta["lanes"].items():
+            lane = server._lane(wl, batch=lm["batch"],
+                                scan_steps=lm["scan_steps"])
+            if lm["backend"] != lane.backend:
+                lane.set_backend(lm["backend"])
+            prefix = f"param:{wl}:"
+            leaves = [jnp.asarray(arrays[k])
+                      for k in sorted(k for k in arrays
+                                      if k.startswith(prefix))]
+            _, treedef = jax.tree_util.tree_flatten(lane.params)
+            params = jax.tree_util.tree_unflatten(treedef, leaves)
+            lane.params = params if server.mesh is None else jax.device_put(
+                params, shd.replicated(server.mesh))
+            sp = f"lane:{wl}:"
+            lane.load_state({k[len(sp):]: v for k, v in arrays.items()
+                             if k.startswith(sp)})
+            lane.device_steps = lm["device_steps"]
+            lane.substeps = lm["substeps"]
+            for i, sm in enumerate(lm["slots"]):
+                if sm is None:
+                    continue
+                req = cls._req_from_meta(sm, now)
+                lane.slots[i] = req
+                lane.active[i] = True
+                if lane.kind == "diffusion":
+                    lane._traj[i] = ddim_timesteps(req.steps)
+                server._requests[req.rid] = req
+            if lane.kind == "diffusion":
+                lane._pos = list(lm["pos"])
+            server._idle_ticks[wl] = lm["idle_ticks"]
+        for m in meta["pending"]:
+            req = cls._req_from_meta(m, now)
+            server._pending.append(req)
+            server._requests[req.rid] = req
+        for m in meta["done"]:
+            req = cls._req_from_meta(m, now)
+            req.result = arrays[f"done:{req.rid:08d}"]
+            server._done[req.rid] = req
+            server._requests[req.rid] = req
+        for m in meta["dropped"]:
+            server._requests[m["rid"]] = cls._req_from_meta(m, now)
+        return server
 
     # ------------------------------------------------------------- metrics --
     @property
@@ -756,6 +1167,12 @@ class GenServer:
             "cancelled": float(statuses.count("cancelled")),
             "timeout": float(statuses.count("timeout")),
             "shed": float(statuses.count("shed")),
+            # fault-tolerance counters (DESIGN.md §11)
+            "degraded": float(len(self._degraded)),
+            "retries": float(self._retries),
+            "recoveries": float(self._recoveries),
+            "corrupt": float(statuses.count("corrupt")),
+            "snapshots": float(self._snapshots),
         }
 
 
@@ -800,6 +1217,12 @@ def main() -> None:
                     help="per-request scheduler-tick timeout")
     ap.add_argument("--autoscale", action="store_true",
                     help="grow/shrink lane batches with backlog")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="checkpoint scheduler state here (DESIGN.md §11); "
+                         "with an existing committed snapshot the server "
+                         "restores and resumes the drain")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="auto-snapshot every N ticks (0: on demand only)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny widths (CI): 16x16 images, small DCGAN")
     ns = ap.parse_args()
@@ -809,22 +1232,31 @@ def main() -> None:
     scan: int | str = ns.scan_steps if ns.scan_steps == "auto" \
         else int(ns.scan_steps)
     kw: dict = dict(batch=ns.batch, backend=ns.backend, scan_steps=scan,
-                    autoscale=ns.autoscale)
+                    autoscale=ns.autoscale,
+                    snapshot_dir=ns.snapshot_dir,
+                    snapshot_every=ns.snapshot_every)
     if ns.smoke or (ns.backend == "pallas" and jax.default_backend() == "cpu"):
         # interpret-mode pallas needs tiny widths to stay tractable on CPU
         kw.update(unet_widths=(8, 8), unet_hw=4, dcgan_nz=16, dcgan_ngf=4)
     cache = cal.default_cache_path()
     if cache.exists():          # host-grounded admission estimates when a
         kw["calibration"] = cal.Calibration.load(cache)  # table was captured
-    server = GenServer(**kw)
     step_list = [int(s) for s in ns.steps.split(",")]
-    for i in range(ns.requests):
-        server.submit(ns.workload, steps=step_list[i % len(step_list)],
-                      seed=ns.seed + i, slo=ns.slo,
-                      timeout_ticks=ns.timeout_ticks)
+    if ns.snapshot_dir and ckpt.latest_step(ns.snapshot_dir) is not None:
+        server = GenServer.restore(
+            ns.snapshot_dir, snapshot_every=ns.snapshot_every,
+            calibration=kw.get("calibration"))
+        print(f"[serve_gen] restored tick {server._tick} from "
+              f"{ns.snapshot_dir} — resuming drain")
+    else:
+        server = GenServer(**kw)
+        for i in range(ns.requests):
+            server.submit(ns.workload, steps=step_list[i % len(step_list)],
+                          seed=ns.seed + i, slo=ns.slo,
+                          timeout_ticks=ns.timeout_ticks)
     images = server.run()
     st = server.stats()
-    lane = server._lanes[ns.workload]
+    lane = server._lanes.get(ns.workload)
     print(f"[serve_gen] {st['requests']} requests "
           f"({ns.workload}, steps {ns.steps}, slo={ns.slo}, "
           f"scan_steps={getattr(lane, 'scan_steps', 1)}) in "
@@ -834,7 +1266,13 @@ def main() -> None:
           f"(warm {st['warm_images_per_s']:.2f}), "
           f"p50 {st['latency_p50_s'] * 1e3:.0f} ms / "
           f"p99 {st['latency_p99_s'] * 1e3:.0f} ms")
-    dropped = int(st["cancelled"] + st["timeout"] + st["shed"])
+    if st["degraded"] or st["retries"] or st["recoveries"] or st["snapshots"]:
+        print(f"[serve_gen] fault plane: {st['degraded']:.0f} degraded "
+              f"lane(s), {st['retries']:.0f} retries, "
+              f"{st['recoveries']:.0f} recoveries, "
+              f"{st['snapshots']:.0f} snapshots")
+    dropped = int(st["cancelled"] + st["timeout"] + st["shed"] +
+                  st["corrupt"])
     if dropped:
         print(f"[serve_gen] dropped {dropped} request(s): "
               f"{st['cancelled']:.0f} cancelled, {st['timeout']:.0f} "

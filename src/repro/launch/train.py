@@ -94,6 +94,7 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
         ckpt_thread = None
         metrics = {}
         step = start
+        recoveries = 0
         while step < steps:
             try:
                 got_step, np_batch = next(pipe)
@@ -105,6 +106,12 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
                 if injector is not None:
                     injector.maybe_fail(got_step)
                 t0 = time.time()
+                if injector is not None:
+                    # slow faults stall inside the timed window, so the
+                    # watchdog sees exactly the injected straggler
+                    stall = injector.sleep_faults(got_step)
+                    if stall > 0:
+                        time.sleep(stall)
                 params, opt_state, metrics = train_jit(params, opt_state,
                                                        batch)
                 metrics = jax.device_get(metrics)
@@ -126,7 +133,10 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
                 print(f"[train] FAILURE: {e}; recovering", flush=True)
                 if not ckpt_dir:
                     raise
+                recoveries += 1
                 if ckpt_thread is not None:
+                    # join() re-raises a failed background save — a recovery
+                    # must not silently restore from a step that never landed
                     ckpt_thread.join()
                     ckpt_thread = None
                 s = latest_step(ckpt_dir)
@@ -142,6 +152,7 @@ def train(cfg, *, steps: int, global_batch: int, seq_len: int,
             ckpt_thread.join()
         pipe.close()
         metrics["stragglers"] = len(watchdog.flagged)
+        metrics["recoveries"] = recoveries
         metrics["final_step"] = step
         return metrics
 

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.checkpoint import (latest_step, load_extra, load_flat,
+                              restore_checkpoint, save_checkpoint)
 from repro.checkpoint.ckpt import all_steps
 from repro.data import LMDataPipeline, SegDataPipeline
 
@@ -53,6 +54,45 @@ def test_restore_shape_mismatch_raises(tmp_path):
     bad = jax.eval_shape(lambda: {"w": jnp.zeros((3, 3))})
     with pytest.raises(ValueError, match="shape"):
         restore_checkpoint(str(tmp_path), 1, bad)
+
+
+def test_background_save_failure_surfaces_on_join(tmp_path, monkeypatch):
+    """Regression: the background-save thread used to print a failed
+    serialization to stderr and drop it — the step silently never landed.
+    The returned future must re-raise on join(), and the failed step must
+    not look committed."""
+    import repro.checkpoint.ckpt as ckpt_mod
+
+    def _boom(*a, **k):
+        raise OSError("disk full (doctored)")
+
+    monkeypatch.setattr(ckpt_mod.np, "savez", _boom)
+    fut = save_checkpoint(str(tmp_path), 7, _tree(), background=True)
+    with pytest.raises(OSError, match="disk full"):
+        fut.join()
+    assert not fut.is_alive()
+    assert latest_step(str(tmp_path)) is None       # nothing committed
+
+
+def test_flat_dict_roundtrip_with_extra(tmp_path):
+    """The serving layer's snapshot transport: a flat {name: array} dict
+    plus a JSON extra payload round-trips without an abstract tree."""
+    flat = {"lane:unet:x": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "done:00000001": np.ones((4,), np.float32)}
+    extra = {"tick": 9, "pending": [{"rid": 2}]}
+    save_checkpoint(str(tmp_path), 9, flat, extra=extra)
+    arrays, got_extra = load_flat(str(tmp_path), 9)
+    assert got_extra == extra
+    assert load_extra(str(tmp_path), 9) == extra
+    assert sorted(arrays) == sorted(flat)
+    for k in flat:
+        np.testing.assert_array_equal(arrays[k], flat[k])
+
+
+def test_load_flat_rejects_tree_checkpoints(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())      # nested: not flat
+    with pytest.raises(ValueError, match="flat"):
+        load_flat(str(tmp_path), 1)
 
 
 def test_lm_pipeline_deterministic_and_restartable():

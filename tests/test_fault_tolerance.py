@@ -12,7 +12,8 @@ from repro.configs import get_reduced
 from repro.distributed.compression import (compress_bf16, compress_int8_ef,
                                            decompress_int8,
                                            init_error_feedback)
-from repro.distributed.fault_tolerance import (FailureInjector, Heartbeat,
+from repro.distributed.fault_tolerance import (failure_faults, Fault,
+                                               FailureInjector, Heartbeat,
                                                StragglerWatchdog)
 from repro.launch.train import train
 
@@ -55,6 +56,75 @@ def test_heartbeat_detects_dead_hosts(tmp_path):
     hb.beat(1)
     assert Heartbeat.dead_hosts(str(tmp_path), timeout_s=60) == []
     assert Heartbeat.dead_hosts(str(tmp_path), timeout_s=0.0) == [0]
+
+
+def test_heartbeat_monitor_survives_corrupt_and_partial_files(tmp_path):
+    """Regression: a truncated/corrupt heartbeat or a crash inside the
+    atomic-rename window used to raise ``JSONDecodeError`` and take the
+    *monitor* down.  An unprovable heartbeat now reads as dead instead."""
+    Heartbeat(str(tmp_path), host_id=0).beat(1)
+    # host 1: truncated mid-write (invalid JSON)
+    (tmp_path / "heartbeat_001.json").write_text('{"step": 3, "ti')
+    # host 2: crashed inside the rename window — only the .tmp exists
+    (tmp_path / "heartbeat_002.json.tmp").write_text(
+        '{"step": 3, "time": 1.0}')
+    # host 3: valid JSON, wrong schema
+    (tmp_path / "heartbeat_003.json").write_text('{"steps": []}')
+    dead = Heartbeat.dead_hosts(str(tmp_path), timeout_s=60)
+    assert dead == [1, 2, 3]
+    # a host whose committed beat is fresh stays alive even if a stale
+    # .tmp from an interrupted *later* beat is lying around
+    Heartbeat(str(tmp_path), host_id=1).beat(2)
+    (tmp_path / "heartbeat_001.json.tmp").write_text("{")
+    assert Heartbeat.dead_hosts(str(tmp_path), timeout_s=60) == [2, 3]
+
+
+def test_fault_take_matches_and_consumes():
+    """take() semantics the chaos drills rely on: kind/tick/target/backend
+    filters, None-matches-anything, once-faults disarm after firing."""
+    inj = FailureInjector(faults=[
+        Fault(at=2, kind="raise", target="unet_dec"),
+        Fault(at=None, kind="raise", backend="pallas", once=False),
+        Fault(at=3, kind="slow", seconds=0.5),
+    ])
+    # wrong kind / wrong tick / wrong target: no hit
+    assert inj.take(1, kind="corrupt") == []
+    assert inj.take(1, kind="raise", target="unet_dec",
+                    backend="xla") == []
+    # the persistent backend fault fires on pallas every tick, never on a
+    # degraded (xla) consumer
+    assert len(inj.take(2, kind="raise", target="unet_dec",
+                        backend="pallas")) == 2     # targeted + persistent
+    assert len(inj.take(2, kind="raise", target="unet_dec",
+                        backend="pallas")) == 1     # once-fault consumed
+    assert inj.take(5, kind="raise", backend="xla") == []
+    assert inj.sleep_faults(3) == 0.5
+    assert inj.sleep_faults(3) == 0.0               # consumed
+
+
+def test_fault_kind_validated():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(at=0, kind="explode")
+
+
+def test_failure_faults_recipes():
+    inj = failure_faults(kill_at=4, backend_broken="pallas")
+    assert inj.take(3, kind="kill") == []
+    assert len(inj.take(4, kind="kill")) == 1
+    # the broken-backend fault is persistent until the consumer degrades
+    for tick in (0, 1, 2):
+        assert len(inj.take(tick, kind="raise", backend="pallas")) == 1
+    assert inj.take(3, kind="raise", backend="xla") == []
+
+
+def test_injector_seed_contract_unchanged():
+    """The original train-loop contract: ``FailureInjector({12})`` raises
+    at step 12, once."""
+    inj = FailureInjector({12})
+    inj.maybe_fail(11)
+    with pytest.raises(RuntimeError, match="injected node failure"):
+        inj.maybe_fail(12)
+    inj.maybe_fail(12)                              # once: recovery passes
 
 
 def test_bf16_compression_halves_bytes():

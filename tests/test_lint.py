@@ -1,0 +1,58 @@
+"""Repo lint: the silent-except rule that guards the degradation paths
+(DESIGN.md §11) — CI runs ``tools/lint_silent_except.py src`` blocking."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+
+import lint_silent_except as lint  # noqa: E402
+
+_SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def test_src_tree_is_clean():
+    problems = []
+    for f in sorted(_SRC.rglob("*.py")):
+        problems.extend(lint.check_file(f))
+    assert problems == []
+
+
+def test_flags_bare_except(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text("try:\n    x = 1\nexcept:\n    x = 2\n")
+    assert any("bare 'except:'" in p for p in lint.check_file(f))
+
+
+def test_flags_silent_broad_except(tmp_path):
+    f = tmp_path / "bad.py"
+    f.write_text("try:\n    x = 1\nexcept Exception:\n    pass\n")
+    problems = lint.check_file(f)
+    assert any("silently eats errors" in p for p in problems)
+    # ellipsis body and tuple forms are just as silent
+    f.write_text("try:\n    x = 1\n"
+                 "except (ValueError, BaseException):\n    ...\n")
+    assert lint.check_file(f)
+
+
+def test_allows_handled_broad_except(tmp_path):
+    """Broad catches with a real handler body are the supported fallback
+    idiom (autotune/calibration use them) — not flagged."""
+    f = tmp_path / "ok.py"
+    f.write_text("try:\n    x = 1\n"
+                 "except Exception as e:\n    x = fallback(e)\n")
+    assert lint.check_file(f) == []
+    # narrow silent catches are a judgement call, left alone too
+    f.write_text("try:\n    x = 1\nexcept KeyError:\n    pass\n")
+    assert lint.check_file(f) == []
+
+
+def test_cli_exit_status(tmp_path, capsys):
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    assert lint.main([str(good)]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("try:\n    x = 1\nexcept:\n    pass\n")
+    assert lint.main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "bad.py:3" in out

@@ -235,6 +235,31 @@ def test_serve_report_scan_amortisation():
         cm.serve_report(layers, steps=4, scan_steps=0)
 
 
+def test_serve_report_recovery_term():
+    """``snapshot_every`` prices worst-case recovery (DESIGN.md §11):
+    snapshot_every ticks of batch x scan_steps passes replay, in array
+    cycles and (with a calibration) host wall time."""
+    layers = GEN_WORKLOADS["unet_dec"]()
+    calib = _full_calibration(a=1e-3, b=5.0)
+    r = cm.serve_report(layers, steps=8, batch=2, scan_steps=4,
+                        calibration=calib, snapshot_every=6)
+    assert r["recovery_ticks_worst"] == 6
+    # recovery cost = snapshot_every x one tick of batch*K passes
+    tick_ms = 1e3 * 2 * 4 * cm.report(layers)["our_cycles"] / cm.FREQ_HZ
+    assert r["recovery_ms_worst"] == pytest.approx(6 * tick_ms, rel=1e-9)
+    compute, dispatch = calib.predict_layers_split(layers, backend="xla")
+    assert r["calibrated_recovery_us_worst"] == pytest.approx(
+        6 * (2 * 4 * compute + dispatch), rel=1e-9)
+    # a tighter cadence bounds recovery lower, linearly
+    r3 = cm.serve_report(layers, steps=8, batch=2, scan_steps=4,
+                         snapshot_every=3)
+    assert r3["recovery_ms_worst"] == pytest.approx(
+        r["recovery_ms_worst"] / 2, rel=1e-9)
+    # off by default: no recovery keys without a snapshot cadence
+    r0 = cm.serve_report(layers, steps=8)
+    assert "recovery_ms_worst" not in r0
+
+
 def test_serve_percentiles_model():
     """The drain-simulation percentile model: deterministic, ordered, and
     conserving (every request completes; dispatches follow the tick sim)."""

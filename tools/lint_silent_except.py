@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Repo lint: no silently-swallowed exceptions under ``src/``.
+
+The fault-tolerance layer (DESIGN.md §11) is built on failures *surfacing* —
+retry ladders, degradation, checkpoint recovery all key off the exception
+actually propagating to the right handler.  A silent ``except`` turns a
+recoverable fault into corrupted state, so this lint fails CI on:
+
+* a bare ``except:`` anywhere (catches ``KeyboardInterrupt``/``SystemExit``
+  and hides everything);
+* ``except Exception`` / ``except BaseException`` (alone or in a tuple)
+  whose handler body is only ``pass`` / ``...`` — catching broadly is fine
+  *when the handler does something* (fallback, re-raise, record); eating
+  the error is not.
+
+Usage::
+
+    python tools/lint_silent_except.py [paths...]    # default: src/
+
+Exit status 0 when clean, 1 with one ``path:line: message`` per violation.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+BROAD = ("Exception", "BaseException")
+
+
+def _names(expr: ast.expr | None) -> list[str]:
+    """Exception class names in an ``except`` clause (tuple-aware)."""
+    if expr is None:
+        return []
+    elts = expr.elts if isinstance(expr, ast.Tuple) else [expr]
+    out = []
+    for e in elts:
+        if isinstance(e, ast.Name):
+            out.append(e.id)
+        elif isinstance(e, ast.Attribute):
+            out.append(e.attr)
+    return out
+
+
+def _body_is_silent(body: list[ast.stmt]) -> bool:
+    return all(isinstance(s, ast.Pass)
+               or (isinstance(s, ast.Expr)
+                   and isinstance(s.value, ast.Constant)
+                   and s.value.value is ...)
+               for s in body)
+
+
+def check_file(path: Path) -> list[str]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    problems = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            problems.append(
+                f"{path}:{node.lineno}: bare 'except:' — name the "
+                f"exceptions (a bare except hides even KeyboardInterrupt)")
+        elif (any(n in BROAD for n in _names(node.type))
+                and _body_is_silent(node.body)):
+            problems.append(
+                f"{path}:{node.lineno}: 'except {ast.unparse(node.type)}' "
+                f"with a pass-only body silently eats errors — handle, "
+                f"log, or re-raise")
+    return problems
+
+
+def main(argv: list[str]) -> int:
+    roots = [Path(a) for a in argv] or [Path("src")]
+    problems: list[str] = []
+    n = 0
+    for root in roots:
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            n += 1
+            problems.extend(check_file(f))
+    for p in problems:
+        print(p)
+    print(f"[lint_silent_except] {n} files, {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
