@@ -1,0 +1,116 @@
+"""Mixed-precision benchmark section (DESIGN.md §12).
+
+Two measured tables feed the ``mixed_precision`` section of
+``BENCH_<rev>.json``:
+
+* **wall_ratio** — bf16/fp32 wall-time ratio per engine kind, one small
+  geometry each through the real dispatcher (``calibrate.measure_case``).
+  On CPU hosts bf16 may be *slower* than fp32 (emulated arithmetic); the
+  number is tracked as a trajectory, not asserted against 1.0.
+* **policy_vs_sweep** — the analytic tiling policy
+  (:mod:`repro.kernels.tiling_policy`) against the exhaustive sweep on the
+  same measured candidate times: whether the swept winner lands inside the
+  policy's timed set (``agree``), and the measured-time ratio of the
+  policy's pick to the swept winner (``time_ratio`` — 1.0 means the policy
+  found the true winner; the acceptance bar is 1.05).
+
+Both are wall-derived, so ``perf_gate.py`` gates them at the loose
+wall-ratio tolerance and skips them across ``(backend, device kind)``
+changes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+
+#: geometries the policy-vs-sweep comparison times (smoke-sized: the full
+#: candidate grid is exhaustively measured once per kind)
+POLICY_GEOMETRIES = (
+    ("dense", (1, 16, 16, 16), (3, 3, 16, 16), dict()),
+    ("dilated", (1, 16, 16, 16), (3, 3, 16, 16), dict(dilation=2)),
+    ("tconv", (1, 8, 8, 16), (3, 3, 16, 16), dict(stride=2)),
+)
+
+
+def wall_ratios(*, smoke: bool = True, backend: str = "xla",
+                iters: int = 3) -> dict:
+    """bf16/fp32 measured wall ratio per engine kind (smallest geometry)."""
+    from repro.core import calibrate
+
+    seen: dict[str, object] = {}
+    for case in calibrate.default_cases(smoke):
+        seen.setdefault(case.kind, case)     # first = smallest hw
+    out = {}
+    for kind, case in seen.items():
+        us32 = calibrate.measure_case(case, backend=backend, iters=iters)
+        us16 = calibrate.measure_case(replace(case, dtype="bfloat16"),
+                                      backend=backend, iters=iters)
+        out[kind] = {"fp32_us": round(us32, 1), "bf16_us": round(us16, 1),
+                     "ratio": round(us16 / us32, 3)}
+    return out
+
+
+def policy_vs_sweep(*, iters: int = 2) -> dict:
+    """Exhaustive sweep vs analytic policy on shared measured times.
+
+    Every candidate of each geometry is timed ONCE; the sweep winner and
+    the policy winner are both read off that one table, so ``time_ratio``
+    compares selections, not re-measurements.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import autotune as at
+    from repro.kernels import tiling_policy as tp
+
+    out = {}
+    for kind, x_shape, w_shape, kw in POLICY_GEOMETRIES:
+        stride = kw.get("stride", 1)
+        dilation = kw.get("dilation", 1)
+        h_out = x_shape[1] if kind == "tconv" else -(-x_shape[1] // stride)
+        cands = at.candidates(h_out, w_shape[3])
+        k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(k1, x_shape, jnp.float32)
+        w = jax.random.normal(k2, w_shape, jnp.float32)
+        times = {}
+        for th, tc in cands:
+            call = at._build_call(kind, x, w, th, tc, stride, dilation,
+                                  None, None)
+            times[(th, tc)] = at._time_candidate(call, iters)
+        sweep_winner = min(cands, key=lambda c: times[c])
+        policy_set = tp.top_candidates(
+            kind, x_shape, w_shape, cands, top=at.POLICY_TOP,
+            default_tiles=at.DEFAULT_TILES, stride=stride,
+            dilation=dilation, dtype=jnp.float32)
+        policy_winner = min(policy_set, key=lambda c: times[c])
+        out[kind] = {
+            "n_candidates": len(cands),
+            "n_timed_policy": len(policy_set),
+            "agree": sweep_winner in policy_set,
+            "time_ratio": round(times[policy_winner] / times[sweep_winner],
+                                4),
+        }
+    return out
+
+
+def section(*, smoke: bool = True, backend: str = "xla") -> dict:
+    """The full ``mixed_precision`` payload section."""
+    return {
+        "backend": backend,
+        "wall_ratio": wall_ratios(smoke=smoke, backend=backend),
+        "policy_vs_sweep": policy_vs_sweep(),
+    }
+
+
+def rows(sec: dict) -> list[tuple[str, float, str]]:
+    """CSV rows (name, us, derived) for the printed benchmark stream."""
+    out = []
+    for kind, r in sorted(sec["wall_ratio"].items()):
+        out.append((f"mixed.{kind}", r["bf16_us"],
+                    f"bf16_fp32_ratio={r['ratio']}x"))
+    for kind, r in sorted(sec["policy_vs_sweep"].items()):
+        out.append((f"policy.{kind}", 0.0,
+                    f"agree={int(r['agree'])},time_ratio={r['time_ratio']},"
+                    f"timed={r['n_timed_policy']}/{r['n_candidates']}"))
+    return out

@@ -21,6 +21,9 @@ Three entry families, with per-family tolerances (all relative):
   ``serve.*`` drains.  Wall-derived, so gated at the same loose tolerance
   class as **ratio** (``--serve-tol``) and skipped across
   ``(backend, device kind)`` changes.
+* **mixed** — the ``mixed_precision`` section (DESIGN.md §12): bf16/fp32
+  wall ratio per engine and the analytic-policy-vs-sweep ``time_ratio``.
+  Wall-derived; gated at the **ratio** tolerance and skipped cross-host.
 * **calibration** — the calibrated prediction-error report: per
   ``(kind, backend, device kind)`` key, the MAPE may not grow by more than
   ``--mape-slack`` percentage points over baseline (a growing MAPE means
@@ -74,7 +77,7 @@ def extract(payload: dict) -> dict[str, dict[str, float]]:
     """Flatten a bench JSON into gate-comparable ``family -> name -> value``."""
     out: dict[str, dict[str, float]] = {
         "model": {}, "ratio": {}, "serve": {}, "calib_slope": {},
-        "calib_mape": {},
+        "calib_mape": {}, "mixed": {},
     }
     for row in payload.get("rows", []):
         name = row.get("name", "")
@@ -93,6 +96,12 @@ def extract(payload: dict) -> dict[str, dict[str, float]]:
         out["calib_slope"][key] = float(co.get("a_us_per_cycle", 0.0))
     for key, err in calib.get("errors", {}).items():
         out["calib_mape"][key] = float(err.get("mape_pct", 0.0))
+    mp = payload.get("mixed_precision", {})
+    for kind, r in mp.get("wall_ratio", {}).items():
+        out["mixed"][f"wall_ratio/{kind}"] = float(r.get("ratio", 0.0))
+    for kind, r in mp.get("policy_vs_sweep", {}).items():
+        out["mixed"][f"policy/{kind}/time_ratio"] = float(
+            r.get("time_ratio", 0.0))
     return out
 
 
@@ -144,6 +153,7 @@ def compare(cur: dict, base: dict, *, model_tol: float = 0.01,
     if wall_ok:
         rel_gate("ratio", ratio_tol)
         rel_gate("serve", serve_tol)
+        rel_gate("mixed", ratio_tol)
         rel_gate("calib_slope", calib_tol)
         for key, bmape in sorted(base_e["calib_mape"].items()):
             cmape = cur_e["calib_mape"].get(key)

@@ -86,8 +86,8 @@ def main(argv: list[str] | None = None) -> None:
 
     from benchmarks import (enet_roofline, fig10_enet_speedup,
                             fig11_dilated_layers, fig12_transposed_layers,
-                            kernel_bench, roofline, serve_bench,
-                            table1_throughput)
+                            kernel_bench, mixed_precision, roofline,
+                            serve_bench, table1_throughput)
 
     all_rows = []
     print("name,us_per_call,derived")
@@ -99,6 +99,13 @@ def main(argv: list[str] | None = None) -> None:
         for name, us, derived in mod.run(csv=True, **kw):
             print(f"{name},{us:.1f},{derived}")
             all_rows.append((name, us, derived))
+
+    # bf16/fp32 wall ratios + analytic-policy agreement (DESIGN.md §12);
+    # measured once, feeding both the CSV stream and the JSON section
+    mp_section = mixed_precision.section(smoke=ns.smoke)
+    for name, us, derived in mixed_precision.rows(mp_section):
+        print(f"{name},{us:.1f},{derived}")
+        all_rows.append((name, us, derived))
 
     if (ns.emit_json or ns.smoke) and not ns.no_json:
         import jax
@@ -120,6 +127,9 @@ def main(argv: list[str] | None = None) -> None:
             # measured serving p50/p99 + dispatches/image (DESIGN.md §9) —
             # gated by perf_gate.py like the wall-ratio families
             "serve_latency": _serve_latency(all_rows),
+            # bf16/fp32 wall ratio per engine + analytic tiling policy vs
+            # exhaustive sweep (DESIGN.md §12) — wall-class gate family
+            "mixed_precision": mp_section,
             # calibrated cycles->us fit + prediction-error report per
             # (engine kind, backend, device kind) — the trajectory the
             # perf gate tracks (DESIGN.md §10)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import SegDataPipeline
+from repro.launch import train_recipes
 from repro.models import enet
 from repro.optim import adamw_init, adamw_update, cosine_schedule
 
@@ -36,6 +37,13 @@ def main() -> None:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
                     help="execution engine for every conv (fwd AND bwd)")
+    ap.add_argument("--dtype", choices=("fp32", "bf16"), default="fp32",
+                    help="compute dtype of the forward/backward activations; "
+                         "bf16 trains through the mixed-precision recipe "
+                         "(fp32 masters + dynamic loss scaling, DESIGN.md "
+                         "§12)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI-sized run (caps steps/batch/hw)")
     ap.add_argument("--naive", action="store_true",
                     help="run the zero-laden baseline (no decomposition; "
                          "xla backend only)")
@@ -43,24 +51,47 @@ def main() -> None:
     decomposed = not args.naive
     if args.naive and args.backend == "pallas":
         ap.error("--naive has no pallas kernels; use --backend xla")
+    if args.smoke:
+        args.steps = min(args.steps, 3)
+        args.batch = min(args.batch, 1)
+        args.hw = min(args.hw, 16)
+        args.log_every = 1
 
     params = enet.init_params(jax.random.PRNGKey(0), args.classes)
-    opt = adamw_init(params)
     pipe = SegDataPipeline(args.batch, hw=args.hw, classes=args.classes)
 
-    @jax.jit
-    def train_step(params, opt, image, label, lr):
-        def loss_fn(p):
-            logits = enet.forward(p, image, decomposed=decomposed,
-                                  backend=args.backend)
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-            nll = -jnp.take_along_axis(logp, label[..., None], axis=-1)
-            return jnp.mean(nll)
+    if args.dtype == "bf16":
+        # the mixed-precision recipe owns the optimizer + loss scaling
+        state = train_recipes.init_state(params)
+        recipe_step = train_recipes.make_train_step(
+            "enet", backend=args.backend, decomposed=decomposed,
+            compute_dtype="bf16", lr=args.lr, weight_decay=1e-4)
 
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        params, opt, gnorm = adamw_update(grads, opt, params, lr=lr,
-                                          weight_decay=1e-4)
-        return params, opt, loss, gnorm
+        def train_step(params, opt, image, label, lr):
+            nonlocal state
+            state = state._replace(params=params, opt=opt)
+            state, m = recipe_step(state,
+                                   {"image": image, "label": label})
+            return state.params, state.opt, m["loss"], m["grad_norm"]
+
+        opt = state.opt
+    else:
+        opt = adamw_init(params)
+
+        @jax.jit
+        def train_step(params, opt, image, label, lr):
+            def loss_fn(p):
+                logits = enet.forward(p, image, decomposed=decomposed,
+                                      backend=args.backend)
+                logp = jax.nn.log_softmax(logits.astype(jnp.float32),
+                                          axis=-1)
+                nll = -jnp.take_along_axis(logp, label[..., None], axis=-1)
+                return jnp.mean(nll)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt, gnorm = adamw_update(grads, opt, params, lr=lr,
+                                              weight_decay=1e-4)
+            return params, opt, loss, gnorm
 
     losses = []
     for step in range(args.steps):
@@ -75,15 +106,19 @@ def main() -> None:
             print(f"step {step:4d} loss {float(loss):.4f} "
                   f"gnorm {float(gnorm):.3f} dt {(time.time()-t0)*1e3:.0f}ms",
                   flush=True)
+        if not np.isfinite(losses[-1]):
+            raise SystemExit(f"non-finite loss at step {step}")
 
     first, last = np.mean(losses[:10]), np.mean(losses[-10:])
     print(f"\nloss: first10={first:.4f} last10={last:.4f} "
           f"({'improved' if last < first else 'NOT improved'})")
     # pixel accuracy on a fresh batch
     b = pipe.batch_at(10_000)
+    cd = "bf16" if args.dtype == "bf16" else None
     pred = jnp.argmax(enet.forward(params, jnp.asarray(b["image"]),
                                    decomposed=decomposed,
-                                   backend=args.backend), -1)
+                                   backend=args.backend,
+                                   compute_dtype=cd), -1)
     acc = float(jnp.mean(pred == jnp.asarray(b["label"])))
     print(f"pixel accuracy on held-out batch: {acc:.3f} "
           f"(chance = {1.0 / args.classes:.3f})")

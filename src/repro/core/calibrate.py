@@ -8,9 +8,13 @@ geometry, and fits a least-squares affine map
 
     ``us_measured ~= a * cycles_modeled + b``
 
-per ``(engine kind, backend, device kind)`` key.  ``a`` is the effective
-microseconds-per-modeled-cycle of this host (its inverse is the host's
-"array rate"), ``b`` the fixed per-call dispatch overhead.  Prediction-error
+per ``(engine kind, backend, device kind, dtype)`` key.  ``a`` is the
+effective microseconds-per-modeled-cycle of this host (its inverse is the
+host's "array rate"), ``b`` the fixed per-call dispatch overhead.  The
+dtype is part of the key because bf16 halves the bytes moved per modeled
+cycle — a single fit shared across precisions mispredicts both (the
+schema-2 bugfix; schema-1 payloads load with their keys mapped to
+``/float32``).  Prediction-error
 reports (per-sample relative error + MAPE per key) are emitted into
 ``BENCH_<rev>.json`` by ``benchmarks/run.py`` and gated over revisions by
 ``benchmarks/perf_gate.py``.
@@ -58,11 +62,12 @@ def _device_kind() -> str:
     return "".join(c if c.isalnum() else "_" for c in kind)
 
 
-def key_of(kind: str, backend: str, device_kind: str | None = None) -> str:
-    """Canonical calibration key ``kind/backend/device_kind``."""
+def key_of(kind: str, backend: str, device_kind: str | None = None,
+           dtype: str = "float32") -> str:
+    """Canonical calibration key ``kind/backend/device_kind/dtype``."""
     if kind not in KINDS:
         raise ValueError(f"unknown engine kind {kind!r}; known: {KINDS}")
-    return f"{kind}/{backend}/{device_kind or _device_kind()}"
+    return f"{kind}/{backend}/{device_kind or _device_kind()}/{dtype}"
 
 
 @dataclass(frozen=True)
@@ -74,10 +79,11 @@ class Sample:
     name: str           # geometry tag, e.g. "dense/32x32x16->32/k3s1"
     cycles: float       # modeled cycles (cycle_model costing of the geometry)
     us: float           # measured microseconds (blocking, best-of-N)
+    dtype: str = "float32"      # compute dtype the measurement ran in
 
     @property
     def key(self) -> str:
-        return key_of(self.kind, self.backend, self.device_kind)
+        return key_of(self.kind, self.backend, self.device_kind, self.dtype)
 
 
 @dataclass
@@ -135,14 +141,26 @@ class Calibration:
         return cls({k: _fit_one(v) for k, v in sorted(by_key.items())})
 
     # ---------------------------------------------------------- prediction --
+    def _coeffs_for(self, kind: str, backend: str,
+                    device_kind: str | None, dtype: str):
+        """Fit for a key, falling back to the fp32 fit when a non-fp32
+        dtype is unfitted — fp32 wall is an upper bound for bf16, so the
+        fallback is a conservative estimate rather than "no estimate"."""
+        co = self.coeffs.get(key_of(kind, backend, device_kind, dtype))
+        if co is None and dtype != "float32":
+            co = self.coeffs.get(key_of(kind, backend, device_kind))
+        return co
+
     def predict(self, kind: str, cycles: float, *, backend: str = "xla",
-                device_kind: str | None = None) -> float | None:
+                device_kind: str | None = None,
+                dtype: str = "float32") -> float | None:
         """Predicted wall microseconds, or ``None`` if the key is unfitted."""
-        co = self.coeffs.get(key_of(kind, backend, device_kind))
+        co = self._coeffs_for(kind, backend, device_kind, dtype)
         return None if co is None else co.predict(cycles)
 
     def predict_layers(self, layers: list[ConvLayer], *, backend: str = "xla",
-                       device_kind: str | None = None) -> float | None:
+                       device_kind: str | None = None,
+                       dtype: str = "float32") -> float | None:
         """Calibrated microseconds for one pass over a layer table.
 
         Sums per-layer predictions (each layer is one engine dispatch, so
@@ -151,12 +169,14 @@ class Calibration:
         silently undercount.
         """
         split = self.predict_layers_split(layers, backend=backend,
-                                          device_kind=device_kind)
+                                          device_kind=device_kind,
+                                          dtype=dtype)
         return None if split is None else split[0] + split[1]
 
     def predict_layers_split(self, layers: list[ConvLayer], *,
                              backend: str = "xla",
-                             device_kind: str | None = None
+                             device_kind: str | None = None,
+                             dtype: str = "float32"
                              ) -> tuple[float, float] | None:
         """``(compute_us, dispatch_us)`` for one pass over a layer table.
 
@@ -170,8 +190,8 @@ class Calibration:
         """
         compute = dispatch = 0.0
         for l in layers:
-            co = self.coeffs.get(key_of(KIND_OF_LAYER[l.kind], backend,
-                                        device_kind))
+            co = self._coeffs_for(KIND_OF_LAYER[l.kind], backend,
+                                  device_kind, dtype)
             if co is None:
                 return None
             compute += co.a_us_per_cycle * cm.cycles_our_decomposed(l)
@@ -210,13 +230,23 @@ class Calibration:
 
     # --------------------------------------------------------- persistence --
     def to_payload(self) -> dict:
-        return {"schema": 1,
+        return {"schema": 2,
                 "coeffs": {k: asdict(v) for k, v in sorted(self.coeffs.items())}}
 
     @classmethod
     def from_payload(cls, payload: dict) -> "Calibration":
-        return cls({k: Coeffs(**v)
-                    for k, v in payload.get("coeffs", {}).items()})
+        """Load a payload; schema-1 keys (no dtype segment) map to fp32.
+
+        Pre-dtype caches were fitted exclusively on fp32 captures, so
+        ``kind/backend/device`` upgrades losslessly to
+        ``kind/backend/device/float32``.
+        """
+        coeffs = {}
+        for k, v in payload.get("coeffs", {}).items():
+            if k.count("/") == 2:       # schema 1: dtype segment missing
+                k = f"{k}/float32"
+            coeffs[k] = Coeffs(**v)
+        return cls(coeffs)
 
     def save(self, path: str | pathlib.Path) -> None:
         p = pathlib.Path(path)
@@ -252,13 +282,15 @@ class CaptureCase:
     stride: int = 1
     dilation: int = 1
     output_padding: int = 1     # tconv only
+    dtype: str = "float32"      # compute dtype the engines run in
 
     @property
     def name(self) -> str:
         n, h, w, cin = self.x_shape
         kh, kw, _, cout = self.w_shape
+        tag = "" if self.dtype == "float32" else f"/{self.dtype}"
         return (f"{self.kind}/{n}x{h}x{w}x{cin}->{cout}"
-                f"/k{kh}s{self.stride}d{self.dilation}")
+                f"/k{kh}s{self.stride}d{self.dilation}{tag}")
 
 
 def layer_of(case: CaptureCase) -> ConvLayer:
@@ -317,8 +349,8 @@ def measure_case(case: CaptureCase, *, backend: str = "xla",
     from repro.kernels.util import time_call
 
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
-    x = jax.random.normal(k1, case.x_shape, jnp.float32)
-    w = jax.random.normal(k2, case.w_shape, jnp.float32)
+    x = jax.random.normal(k1, case.x_shape, jnp.float32).astype(case.dtype)
+    w = jax.random.normal(k2, case.w_shape, jnp.float32).astype(case.dtype)
     call = jax.jit(lambda a, b: conv2d(
         a, b, stride=case.stride, dilation=case.dilation,
         transposed=case.kind == "tconv",
@@ -328,32 +360,40 @@ def measure_case(case: CaptureCase, *, backend: str = "xla",
 
 
 def capture_samples(*, smoke: bool = True, backends: tuple[str, ...] = ("xla",),
-                    iters: int = 3,
-                    cases: list[CaptureCase] | None = None) -> list[Sample]:
+                    iters: int = 3, cases: list[CaptureCase] | None = None,
+                    dtypes: tuple[str, ...] = ("float32",)) -> list[Sample]:
     """Measure the capture sweep on this host; returns fit-ready samples.
 
     ``backends`` defaults to xla only — the pallas kernels run in interpret
     mode on CPU hosts, where wall time measures the interpreter, not the
     kernel; pass ``("xla", "pallas")`` on a real accelerator (or to track
-    the interpret-mode trajectory explicitly).
+    the interpret-mode trajectory explicitly).  Each dtype in ``dtypes``
+    re-times the sweep in that precision and lands under its own fit key.
     """
+    from dataclasses import replace
+
     dev = _device_kind()
     cases = default_cases(smoke) if cases is None else cases
     out = []
     for backend in backends:
-        for case in cases:
-            us = measure_case(case, backend=backend, iters=iters)
-            out.append(Sample(case.kind, backend, dev, case.name,
-                              modeled_cycles(case), us))
+        for dtype in dtypes:
+            for case in cases:
+                case = replace(case, dtype=dtype)
+                us = measure_case(case, backend=backend, iters=iters)
+                out.append(Sample(case.kind, backend, dev, case.name,
+                                  modeled_cycles(case), us, dtype=dtype))
     return out
 
 
 def capture_and_fit(*, smoke: bool = True,
                     backends: tuple[str, ...] = ("xla",),
-                    iters: int = 3) -> dict:
+                    iters: int = 3,
+                    dtypes: tuple[str, ...] = ("float32", "bfloat16")) -> dict:
     """The ``calibration`` section of ``BENCH_<rev>.json``: capture, fit,
-    and report prediction errors in one payload."""
-    samples = capture_samples(smoke=smoke, backends=backends, iters=iters)
+    and report prediction errors in one payload.  Captures fp32 *and* bf16
+    by default so every precision the engines serve has its own fit."""
+    samples = capture_samples(smoke=smoke, backends=backends, iters=iters,
+                              dtypes=dtypes)
     calib = Calibration.fit(samples)
     return {
         "device_kind": _device_kind(),
@@ -370,7 +410,8 @@ def capture_and_fit(*, smoke: bool = True,
 def tile_scores(h_out: int, cout: int, cands: list[tuple[int, int]],
                 *, kind: str = "dense", backend: str = "xla",
                 base_cycles: float | None = None,
-                calibration: "Calibration | None" = None
+                calibration: "Calibration | None" = None,
+                dtype: str = "float32"
                 ) -> list[tuple[float, tuple[int, int]]]:
     """Model-driven score per ``(th, tc)`` candidate (lower is better).
 
@@ -388,7 +429,9 @@ def tile_scores(h_out: int, cout: int, cands: list[tuple[int, int]],
     """
     cell_w = 1e-3
     if calibration is not None and base_cycles:
-        co = calibration.coeffs.get(key_of(kind, backend))
+        co = calibration.coeffs.get(key_of(kind, backend, dtype=dtype))
+        if co is None:      # fall back to the fp32 fit of the same engine
+            co = calibration.coeffs.get(key_of(kind, backend))
         if co is not None and co.a_us_per_cycle > 0:
             compute_us = co.a_us_per_cycle * base_cycles
             if compute_us > 0:

@@ -44,12 +44,18 @@ import jax
 from repro.core import dilated as _dil
 from repro.core import transposed as _tr
 from repro.kernels.epilogue import EpilogueSpec, apply_reference, pack_args
+from repro.kernels.util import canon_dtype
 
 
 def _resolve_tiles(kind: str, x, w, stride: int, dilation: int,
                    th: int | None, tc: int | None, padding=None,
-                   output_padding: int | None = None) -> tuple[int, int]:
-    """Fill unset tile dims from the autotune table (DESIGN.md §7)."""
+                   output_padding: int | None = None,
+                   epilogue: EpilogueSpec | None = None) -> tuple[int, int]:
+    """Fill unset tile dims from the autotune table (DESIGN.md §7).
+
+    The epilogue spec rides into the cache key — fused operands change the
+    kernel's VMEM footprint, so each configuration tunes separately.
+    """
     from repro.kernels import autotune
 
     if th is not None and tc is not None:
@@ -57,7 +63,8 @@ def _resolve_tiles(kind: str, x, w, stride: int, dilation: int,
     tth, ttc = autotune.get_tiles(kind, tuple(x.shape), tuple(w.shape),
                                   stride=stride, dilation=dilation,
                                   dtype=x.dtype, padding=padding,
-                                  output_padding=output_padding)
+                                  output_padding=output_padding,
+                                  epilogue=epilogue)
     return (tth if th is None else th), (ttc if tc is None else tc)
 
 
@@ -81,6 +88,7 @@ def conv2d(
     residual: jax.Array | None = None,
     th: int | None = None,
     tc: int | None = None,
+    compute_dtype=None,
 ) -> jax.Array:
     """General 2-D convolution with the paper's decomposition applied.
 
@@ -106,9 +114,21 @@ def conv2d(
         fused in-kernel on pallas, applied as the reference oracle on xla.
       th, tc: Pallas tile shape override; ``None`` resolves through the
         autotune table (:mod:`repro.kernels.autotune`).
+      compute_dtype: mixed-precision opt-in (DESIGN.md §12): ``None`` keeps
+        the input dtype; a dtype (or alias string like ``"bf16"``) casts
+        ``x``/``w``/``residual`` to it before dispatch, and the output comes
+        back in it — accumulation stays fp32 inside the Pallas kernels, and
+        the epilogue's channel operands (scale/shift/alpha) stay fp32
+        throughout.  ``bf16`` in -> ``bf16`` out holds on every path.
     """
     if backend not in ("xla", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
+    cd = canon_dtype(compute_dtype)
+    if cd is not None:
+        x = x.astype(cd)
+        w = w.astype(cd)
+        if residual is not None:
+            residual = residual.astype(cd)
     if backend == "pallas" and not decomposed:
         # the fused kernels ARE the decomposition; the naive zero-laden
         # baseline only exists as composed XLA convolutions
@@ -128,7 +148,8 @@ def conv2d(
             from repro.kernels.transposed_conv import transposed_conv2d as _ktr
 
             th, tc = _resolve_tiles("tconv", x, w, stride, 1, th, tc,
-                                    padding=p, output_padding=output_padding)
+                                    padding=p, output_padding=output_padding,
+                                    epilogue=spec)
             return _ktr(x, w, stride=stride, padding=p,
                         output_padding=output_padding, th=th, tc=tc,
                         interpret=interpret, epilogue=epilogue, **ep_kw)
@@ -146,7 +167,8 @@ def conv2d(
                     f"pallas dilated path is phase-batched only, got {strategy!r}")
             from repro.kernels.dilated_conv import dilated_conv2d as _kdil
 
-            th, tc = _resolve_tiles("dilated", x, w, stride, dilation, th, tc)
+            th, tc = _resolve_tiles("dilated", x, w, stride, dilation, th, tc,
+                                    epilogue=spec)
             return _kdil(x, w, dilation, stride=stride, th=th, tc=tc,
                          interpret=interpret, epilogue=epilogue, **ep_kw)
         if decomposed:
@@ -160,7 +182,7 @@ def conv2d(
         from repro.kernels.conv2d import conv2d as _kconv
 
         th, tc = _resolve_tiles("dense", x, w, stride, 1, th, tc,
-                                padding=padding)
+                                padding=padding, epilogue=spec)
         return _kconv(x, w, stride=stride,
                       padding="SAME" if padding is None else padding,
                       th=th, tc=tc, interpret=interpret, epilogue=epilogue,

@@ -19,7 +19,18 @@ accumulator tile while it is still in VMEM, removing up to three elementwise
 HBM passes per convolution.
 
 VMEM per step ~ x_tile(2 * s*TH * Wp * Cin) + w(kh*kw*Cin*TC) + out(TH*W*TC),
-sized well under a v5e core's VMEM for every shape used in this repo.
+sized well under a v5e core's VMEM for every shape used in this repo.  The
+grid runs the row stream innermost with ``dimension_semantics`` declared, so
+Mosaic's pipeliner double-buffers the input halo pair (next tile's DMA
+overlaps the current tile's MXU work) while the weight tile stays resident
+for a whole ``Cout``-tile pass; ``tiling_policy.footprint_bytes`` mirrors
+exactly these blocks when the autotuner scores candidates (DESIGN.md §12).
+
+Mixed precision (DESIGN.md §12): bf16 inputs accumulate in fp32 — every tap
+GEMM issues with ``preferred_element_type=jnp.float32``, the fused epilogue
+applies to the fp32 accumulator, and only the final output cast returns to
+the input dtype.  The VJPs keep fp32 tap-correlation accumulation and cast
+``dx``/``dw`` back to the primal dtypes.
 """
 
 from __future__ import annotations
@@ -30,6 +41,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.epilogue import EpilogueSpec, apply_tile, pack_args
 from repro.kernels.util import resolve_interpret
@@ -152,13 +164,17 @@ def _conv2d_raw(x: jax.Array, w: jax.Array, eps: tuple, spec: EpilogueSpec,
     )
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
 
-    grid = (n, n_row_tiles, n_cout_tiles)
+    # grid order (batch, cout tile, row tile): the row stream is innermost,
+    # so the pipeline double-buffers consecutive input row tiles (the halo
+    # pair advances by one block per step) while the weight tile's block
+    # index is unchanged across the whole inner stream and stays resident
+    grid = (n, n_cout_tiles, n_row_tiles)
     x_spec_cur = pl.BlockSpec((1, s * th, cols_needed, cin),
-                              lambda b, i, c: (b, i, 0, 0))
+                              lambda b, c, i: (b, i, 0, 0))
     x_spec_nxt = pl.BlockSpec((1, s * th, cols_needed, cin),
-                              lambda b, i, c: (b, i + 1, 0, 0))
-    w_spec = pl.BlockSpec((kh, kw, cin, tc), lambda b, i, c: (0, 0, 0, c))
-    out_spec = pl.BlockSpec((1, th, w_out, tc), lambda b, i, c: (b, i, 0, c))
+                              lambda b, c, i: (b, i + 1, 0, 0))
+    w_spec = pl.BlockSpec((kh, kw, cin, tc), lambda b, c, i: (0, 0, 0, c))
+    out_spec = pl.BlockSpec((1, th, w_out, tc), lambda b, c, i: (b, i, 0, c))
 
     # epilogue operands: channel vectors as padded (1, cout_p) rows tiled on
     # the cout grid axis; the residual blocked exactly like the output
@@ -171,10 +187,10 @@ def _conv2d_raw(x: jax.Array, w: jax.Array, eps: tuple, spec: EpilogueSpec,
             ep_in.append(jnp.pad(v, ((0, 0), (0, h_out_p - h_out), (0, 0),
                                      (0, cout_p - cout))))
             ep_specs.append(pl.BlockSpec((1, th, w_out, tc),
-                                         lambda b, i, c: (b, i, 0, c)))
+                                         lambda b, c, i: (b, i, 0, c)))
         else:
             ep_in.append(_chan_operand(v, cout, cout_p))
-            ep_specs.append(pl.BlockSpec((1, tc), lambda b, i, c: (0, c)))
+            ep_specs.append(pl.BlockSpec((1, tc), lambda b, c, i: (0, c)))
 
     out = pl.pallas_call(
         functools.partial(_conv_kernel, spec=spec, th=th, kh=kh, kw=kw,
@@ -183,6 +199,11 @@ def _conv2d_raw(x: jax.Array, w: jax.Array, eps: tuple, spec: EpilogueSpec,
         in_specs=[x_spec_cur, x_spec_nxt, w_spec, *ep_specs],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((n, h_out_p, w_out, cout_p), x.dtype),
+        # batch/cout steps are independent; the row stream is sequential so
+        # Mosaic's pipeliner overlaps each tile's DMA with the previous
+        # tile's MXU work (double-buffered VMEM streams)
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, xp, wp, *ep_in)
     return out[:, :h_out, :, :cout]

@@ -75,6 +75,21 @@ class EpilogueSpec:
         return tuple(out)
 
 
+def fingerprint(spec: EpilogueSpec | None) -> str:
+    """Compact cache-key tag of an epilogue configuration.
+
+    The fused operands change the kernel's VMEM footprint (a residual
+    streams a second output-shaped block), so autotune winners are only
+    valid for the configuration they were timed with —
+    ``autotune.make_key`` folds this tag into the cache key.  ``None`` and
+    the empty spec share the tag ``"none"``; anything else is distinct per
+    ``(bn, prelu, residual)``.
+    """
+    if spec is None or spec.empty:
+        return "none"
+    return f"bn{int(spec.bn)}.pr{int(spec.prelu)}.res-{spec.residual}"
+
+
 def pack_args(spec: EpilogueSpec, *, scale=None, shift=None, alpha=None,
               residual=None) -> tuple[jax.Array, ...]:
     """Collect the operand arrays a spec needs into its canonical tuple.
@@ -152,4 +167,5 @@ def apply_tile(spec: EpilogueSpec, acc: jax.Array,
     return acc
 
 
-__all__ = ["EpilogueSpec", "pack_args", "apply_reference", "apply_tile"]
+__all__ = ["EpilogueSpec", "pack_args", "apply_reference", "apply_tile",
+           "fingerprint"]

@@ -1,0 +1,274 @@
+"""Analytic ``(th, tc)`` tiling policy for the Pallas engines (DESIGN.md §12).
+
+The autotuner used to *time* the whole candidate grid per geometry.  This
+module scores every candidate from first principles instead, so only the
+top few (plus ``DEFAULT_TILES``) are ever run:
+
+* **VMEM footprint** — each candidate's per-grid-step working set, assembled
+  from the same block shapes the kernels declare (`conv2d.py`,
+  `transposed_conv.py`), doubled for the pipeline's double-buffered
+  input/weight/output streams, plus the fp32 accumulator.  The footprint is
+  dtype-aware (bf16 halves the streamed bytes) and epilogue-aware (a fused
+  residual streams a second output-shaped block; channel vectors ride along
+  as fp32 rows).  Candidates that overflow the budget score ``inf`` — they
+  would spill or fail to fit, so they are never worth timing.
+* **MXU occupancy** — each grid step issues GEMMs of shape
+  ``(th * w_out, cin) x (cin, tc)``.  Lanes pad to 128, sublanes pack by
+  dtype (8 fp32 / 16 bf16 rows per tile), so narrow ``tc`` or a flattened
+  row count that straddles a packing boundary wastes issue slots.
+* **tile quantization + grid overhead** — the classic terms shared with
+  ``calibrate.tile_scores``: padded-output work multiplier and a per-cell
+  dispatch weight (calibrated from the fitted ``b_us / (a * cycles)`` when
+  a :class:`~repro.core.calibrate.Calibration` is supplied).
+
+The combined score is ``quantization_waste / occupancy + cell_w * cells``
+(lower is better), with ``inf`` for budget violations.  ``top_candidates``
+returns the top-``k`` plus ``DEFAULT_TILES``; when the geometry cannot be
+modeled (unknown kind) or ``$REPRO_AUTOTUNE_SWEEP`` is set, it falls back
+to the full exhaustive sweep so the policy can never hide a winner the old
+path would have found.
+"""
+
+from __future__ import annotations
+
+import math
+import os
+
+import jax.numpy as jnp
+
+#: ~16 MiB of VMEM per TPU core; leave headroom for compiler scratch and
+#: semaphores so a "fits" verdict survives lowering.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+#: MXU lane width — the last-dim tiling quantum on TPU.
+LANES = 128
+
+_KINDS = ("dense", "dilated", "tconv")
+
+
+def itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def sublanes(dtype) -> int:
+    """Rows per (sublane, lane) register tile: 8 fp32, 16 bf16, 32 int8."""
+    return max(8 * (4 // max(itemsize(dtype), 1)), 8)
+
+
+def _ep_extra(spec, out_elems: int, isz: int) -> int:
+    """Streamed bytes a fused epilogue adds per grid step.
+
+    Channel vectors (scale/shift/alpha) travel as fp32 ``(1, tc)`` rows —
+    negligible but counted; a residual streams a full output-shaped block in
+    the output dtype.
+    """
+    if spec is None or spec.empty:
+        return 0
+    extra = 0
+    for name in spec.slots:
+        extra += out_elems * isz if name == "residual" else 0
+    return extra
+
+
+def _dense_geometry(x_shape, w_shape, stride, padding):
+    n, h, w_in, cin = x_shape
+    kh, kw = w_shape[0], w_shape[1]
+    cout = w_shape[3]
+    if padding is None or padding == "SAME":
+        ph = ((kh - 1) // 2, kh // 2)
+        pw = ((kw - 1) // 2, kw // 2)
+    elif padding == "VALID":
+        ph = pw = (0, 0)
+    else:
+        ph = pw = (padding, padding)
+    h_out = (h + ph[0] + ph[1] - kh) // stride + 1
+    w_out = (w_in + pw[0] + pw[1] - kw) // stride + 1
+    return n, h_out, w_out, cin, cout, kh, kw
+
+
+def _phase_batched(x_shape, dilation):
+    """Dilated convs run the dense kernel on the phase-batched layout."""
+    n, h, w_in, cin = x_shape
+    d = dilation
+    return (n * d * d, -(-h // d), -(-w_in // d), cin)
+
+
+def footprint_bytes(kind: str, x_shape, w_shape, th: int, tc: int, *,
+                    stride: int = 1, dilation: int = 1, padding=None,
+                    output_padding: int | None = None, dtype=jnp.float32,
+                    epilogue=None) -> int:
+    """Per-grid-step VMEM working set of one ``(th, tc)`` candidate (bytes).
+
+    Mirrors the kernels' BlockSpecs: double-buffered input halo pair +
+    weight tile + output tile (x2 for the pipeline), epilogue operands, and
+    the fp32 accumulator.  Dilated geometries are scored as the dense kernel
+    on the phase-batched layout they actually run.
+    """
+    isz = itemsize(dtype)
+    if kind == "dilated":
+        x_shape = _phase_batched(x_shape, dilation)
+        stride, padding = 1, None   # classes fold the stride out
+    if kind in ("dense", "dilated"):
+        _, h_out, w_out, cin, cout, kh, kw = _dense_geometry(
+            x_shape, w_shape, stride, padding)
+        th_e = max(min(th, h_out), math.ceil(max(kh - stride, 0) / stride))
+        tc_e = min(tc, cout)
+        cols = stride * (w_out - 1) + kw
+        x_block = stride * th_e * cols * cin          # x_cur; x_nxt doubles it
+        w_block = kh * kw * cin * tc_e
+        out_block = th_e * w_out * tc_e
+        acc = th_e * w_out * tc_e * 4
+    else:       # tconv: parity-plane kernel (transposed_conv.py)
+        from repro.core import transposed as tr
+        from repro.kernels.transposed_conv import parity_schedule
+
+        n, h, w_in, cin = x_shape
+        k = w_shape[0]
+        cout = w_shape[3]
+        s = stride
+        p_lo = (k - 1) // 2 if padding is None else padding
+        op = 1 if output_padding is None else output_padding
+        oh = tr.out_size(h, s, k, p_lo, p_lo + op)
+        ow = tr.out_size(w_in, s, k, p_lo, p_lo + op)
+        hb, wb = math.ceil(oh / s), math.ceil(ow / s)
+        offs = [o for taps in parity_schedule(k, s, p_lo) for _, o in taps]
+        shift = max(0, -min(offs, default=0))
+        halo = max(offs, default=0) + shift
+        th_e = max(min(th, hb), halo)
+        tc_e = min(tc, cout)
+        cols = max(wb + halo, w_in + shift)
+        x_block = th_e * cols * cin
+        w_block = k * k * cin * tc_e
+        out_block = s * s * th_e * wb * tc_e
+        acc = s * s * th_e * wb * tc_e * 4
+    streamed = (2 * x_block + w_block + out_block) * isz
+    streamed += _ep_extra(epilogue, out_block, isz)
+    return 2 * streamed + acc       # x2: the pipeline double-buffers streams
+
+
+def mxu_occupancy(kind: str, x_shape, w_shape, th: int, tc: int, *,
+                  stride: int = 1, dilation: int = 1, padding=None,
+                  output_padding: int | None = None,
+                  dtype=jnp.float32) -> float:
+    """Fraction of MXU issue slots doing real work for one candidate's GEMM.
+
+    The kernels flatten each tile to ``(th * w_out, cin) x (cin, tc)``;
+    lanes quantize to 128 and sublane rows pack by dtype, so the occupancy
+    is the product of the two padding fractions.
+    """
+    if kind == "dilated":
+        x_shape = _phase_batched(x_shape, dilation)
+        stride, padding = 1, None
+    if kind in ("dense", "dilated"):
+        _, h_out, w_out, _, cout, kh, _ = _dense_geometry(
+            x_shape, w_shape, stride, padding)
+        th_e = max(min(th, h_out), math.ceil(max(kh - stride, 0) / stride))
+        rows = th_e * w_out
+    else:
+        from repro.core import transposed as tr
+
+        n, h, w_in, _ = x_shape
+        k = w_shape[0]
+        cout = w_shape[3]
+        p_lo = (k - 1) // 2 if padding is None else padding
+        op = 1 if output_padding is None else output_padding
+        oh = tr.out_size(h, stride, k, p_lo, p_lo + op)
+        ow = tr.out_size(w_in, stride, k, p_lo, p_lo + op)
+        hb, wb = math.ceil(oh / stride), math.ceil(ow / stride)
+        rows = max(min(th, hb), 1) * wb
+    tc_e = min(tc, cout)
+    sub = sublanes(dtype)
+    lane_occ = tc_e / (math.ceil(tc_e / LANES) * LANES)
+    row_occ = rows / (math.ceil(rows / sub) * sub)
+    return lane_occ * row_occ
+
+
+def _cell_weight(kind: str, backend: str, base_cycles, calibration,
+                 dtype) -> float:
+    """Per-grid-cell overhead weight; calibrated when a fit is available."""
+    cell_w = 1e-3
+    if calibration is not None and base_cycles:
+        from repro.core.calibrate import key_of
+
+        co = calibration.coeffs.get(
+            key_of(kind, backend, dtype=jnp.dtype(dtype).name))
+        if co is None:      # fall back to the fp32 fit of the same engine
+            co = calibration.coeffs.get(key_of(kind, backend))
+        if co is not None and co.a_us_per_cycle > 0:
+            compute_us = co.a_us_per_cycle * base_cycles
+            if compute_us > 0:
+                cell_w = co.b_us / compute_us
+    return cell_w
+
+
+def rank(kind: str, x_shape, w_shape, cands, *, stride: int = 1,
+         dilation: int = 1, padding=None, output_padding: int | None = None,
+         dtype=jnp.float32, epilogue=None, backend: str = "xla",
+         base_cycles: float | None = None, calibration=None,
+         vmem_budget: int = VMEM_BUDGET_BYTES
+         ) -> list[tuple[float, tuple[int, int]]]:
+    """Score every candidate analytically; ``(score, (th, tc))`` ascending.
+
+    ``score = quantization_waste / mxu_occupancy + cell_w * n_cells``, with
+    ``inf`` when the candidate's VMEM footprint exceeds ``vmem_budget``.
+    Ties keep candidate order (the sweep's determinism rule).
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"unknown engine kind {kind!r}")
+    if kind == "tconv":
+        h_out, cout = x_shape[1], w_shape[3]    # th tiles the block-row axis
+    else:
+        h_out, cout = -(-x_shape[1] // stride), w_shape[3]
+    cell_w = _cell_weight(kind, backend, base_cycles, calibration, dtype)
+    geom = dict(stride=stride, dilation=dilation, padding=padding,
+                output_padding=output_padding, dtype=dtype)
+    scored = []
+    for i, (th, tc) in enumerate(cands):
+        vmem = footprint_bytes(kind, x_shape, w_shape, th, tc,
+                               epilogue=epilogue, **geom)
+        if vmem > vmem_budget:
+            scored.append((float("inf"), i, (th, tc)))
+            continue
+        occ = mxu_occupancy(kind, x_shape, w_shape, th, tc, **geom)
+        waste = (math.ceil(h_out / th) * th / h_out) * \
+                (math.ceil(cout / tc) * tc / cout)
+        cells = math.ceil(h_out / th) * math.ceil(cout / tc)
+        scored.append((waste / max(occ, 1e-9) + cell_w * cells, i, (th, tc)))
+    scored.sort(key=lambda t: (t[0], t[1]))
+    return [(s, c) for s, _, c in scored]
+
+
+def sweep_forced() -> bool:
+    """``$REPRO_AUTOTUNE_SWEEP=1`` disables the policy (exhaustive timing)."""
+    return os.environ.get("REPRO_AUTOTUNE_SWEEP", "").lower() in (
+        "1", "true", "on")
+
+
+def top_candidates(kind: str, x_shape, w_shape, cands, *, top: int = 3,
+                   default_tiles: tuple[int, int] | None = None,
+                   **rank_kw) -> list[tuple[int, int]]:
+    """The candidates worth timing: analytic top-``top`` + ``default_tiles``.
+
+    Returns the input list unchanged (exhaustive sweep) when the sweep is
+    forced via the environment or the geometry cannot be scored — the
+    policy degrades to the old behaviour, never to a smaller search space
+    than the baseline tiling.
+    """
+    if sweep_forced():
+        return list(cands)
+    try:
+        ranked = rank(kind, x_shape, w_shape, cands, **rank_kw)
+    except (ValueError, ZeroDivisionError):
+        return list(cands)      # unmodelable geometry: fall back to the sweep
+    keep = [c for s, c in ranked[:top] if math.isfinite(s)]
+    if not keep:                # every candidate over budget — time them all
+        return list(cands)      # rather than guess blind
+    if default_tiles is not None and default_tiles in cands \
+            and default_tiles not in keep:
+        keep.append(default_tiles)
+    return [c for c in cands if c in keep]   # candidate order == sweep order
+
+
+__all__ = ["VMEM_BUDGET_BYTES", "LANES", "itemsize", "sublanes",
+           "footprint_bytes", "mxu_occupancy", "rank", "top_candidates",
+           "sweep_forced"]

@@ -38,6 +38,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.epilogue import (EpilogueSpec, apply_reference, apply_tile,
                                     pack_args)
@@ -204,11 +205,14 @@ def _tconv_raw(x: jax.Array, w: jax.Array, eps: tuple, spec: EpilogueSpec,
                      (shift, cols_p - w_in - shift), (0, 0)))
     wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, cout_p - cout)))
 
-    grid = (n, n_row_tiles, n_cout_tiles)
-    x_cur = pl.BlockSpec((1, th, cols_p, cin), lambda b, i, c: (b, i, 0, 0))
-    x_nxt = pl.BlockSpec((1, th, cols_p, cin), lambda b, i, c: (b, i + 1, 0, 0))
-    w_spec = pl.BlockSpec((k, k, cin, tc), lambda b, i, c: (0, 0, 0, c))
-    out_spec = pl.BlockSpec((1, s * s, th, wb, tc), lambda b, i, c: (b, 0, i, 0, c))
+    # grid order (batch, cout tile, row tile): the row stream is innermost —
+    # the pipeline double-buffers consecutive input tiles (halo pair advances
+    # one block per step) while the weight tile stays resident per cout tile
+    grid = (n, n_cout_tiles, n_row_tiles)
+    x_cur = pl.BlockSpec((1, th, cols_p, cin), lambda b, c, i: (b, i, 0, 0))
+    x_nxt = pl.BlockSpec((1, th, cols_p, cin), lambda b, c, i: (b, i + 1, 0, 0))
+    w_spec = pl.BlockSpec((k, k, cin, tc), lambda b, c, i: (0, 0, 0, c))
+    out_spec = pl.BlockSpec((1, s * s, th, wb, tc), lambda b, c, i: (b, 0, i, 0, c))
 
     # epilogue operands: channel vectors tiled on the cout axis, the residual
     # de-interleaved to parity-plane layout and blocked like the output
@@ -223,10 +227,10 @@ def _tconv_raw(x: jax.Array, w: jax.Array, eps: tuple, spec: EpilogueSpec,
             ep_in.append(_residual_to_planes(v, s, hb, wb,
                                              n_row_tiles * th, cout_p))
             ep_specs.append(pl.BlockSpec((1, s * s, th, wb, tc),
-                                         lambda b, i, c: (b, 0, i, 0, c)))
+                                         lambda b, c, i: (b, 0, i, 0, c)))
         else:
             ep_in.append(_chan_operand(v, cout, cout_p))
-            ep_specs.append(pl.BlockSpec((1, tc), lambda b, i, c: (0, c)))
+            ep_specs.append(pl.BlockSpec((1, tc), lambda b, c, i: (0, c)))
 
     planes = pl.pallas_call(
         functools.partial(_tconv_kernel, spec=spec, th=th, wb=wb, sched=sched,
@@ -236,6 +240,10 @@ def _tconv_raw(x: jax.Array, w: jax.Array, eps: tuple, spec: EpilogueSpec,
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(
             (n, s * s, n_row_tiles * th, wb, cout_p), x.dtype),
+        # batch/cout steps independent; sequential row stream -> Mosaic
+        # overlaps each tile's DMA with the previous tile's MXU work
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xp, xp, wp, *ep_in)
 

@@ -32,6 +32,35 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return interpret
 
 
+#: accepted spellings of the mixed-precision compute dtypes (DESIGN.md §12)
+_DTYPE_ALIASES = {
+    "bf16": "bfloat16", "bfloat16": "bfloat16",
+    "fp32": "float32", "f32": "float32", "float32": "float32",
+    "fp16": "float16", "f16": "float16", "float16": "float16",
+}
+
+
+def canon_dtype(compute_dtype):
+    """Canonicalise a ``compute_dtype`` argument to a jnp dtype (or None).
+
+    Accepts ``None`` (keep the input dtype), a dtype object, or a string
+    alias (``"bf16"``/``"bfloat16"``/``"fp32"``/...).  Strings are the form
+    that rides jit ``static_argnames`` through the model forwards, so the
+    aliases are resolved here, once, for every consumer.
+    """
+    import jax.numpy as jnp
+
+    if compute_dtype is None:
+        return None
+    if isinstance(compute_dtype, str):
+        alias = _DTYPE_ALIASES.get(compute_dtype.lower())
+        if alias is None:
+            raise ValueError(f"unknown compute_dtype {compute_dtype!r}; "
+                             f"known: {sorted(set(_DTYPE_ALIASES))}")
+        return jnp.dtype(alias)
+    return jnp.dtype(compute_dtype)
+
+
 def time_call(fn, *args, iters: int = 5, warmup: int = 1) -> float:
     """Best-of-``iters`` wall time (seconds) of ``fn(*args)``.
 

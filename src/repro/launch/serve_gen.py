@@ -77,6 +77,7 @@ from repro.core.gen_spec import GEN_WORKLOADS, UNET_WIDTHS
 from repro.distributed import sharding as shd
 from repro.distributed.fault_tolerance import (FailureInjector,
                                                StragglerWatchdog)
+from repro.kernels.util import canon_dtype
 from repro.launch.steps import (DDIM_T_MAX, ddim_timesteps,
                                 make_gen_scan_step)
 from repro.models import dcgan, unet_decoder
@@ -221,17 +222,25 @@ class _DiffusionLane:
     def __init__(self, params: dict, *, batch: int, widths: tuple[int, ...],
                  hw: int, out_ch: int, backend: str,
                  interpret: bool | None, decomposed: bool, mesh=None,
-                 spatial: bool = False, scan_steps: int = 1):
+                 spatial: bool = False, scan_steps: int = 1,
+                 compute_dtype: str | None = None):
         size = hw * 2 ** len(widths)
         self.image_shape = (size, size, out_ch)
         self.params = params
         self.scan_steps = scan_steps
         self.backend = backend
         self.decomposed, self.interpret = decomposed, interpret
+        self.compute_dtype = compute_dtype
+        # lane image state lives in the compute dtype: the fused step's
+        # fp32 DDIM update casts back to it, so the slots stay bf16-resident
+        # end to end (half the HBM per slot) when the lane opts in
+        self._x_dtype = (jnp.float32 if compute_dtype is None
+                         else canon_dtype(compute_dtype))
         self.mesh, self.spatial = mesh, spatial
         self._raw_step = make_gen_scan_step(scan_steps, decomposed=decomposed,
                                             backend=backend,
-                                            interpret=interpret)
+                                            interpret=interpret,
+                                            compute_dtype=compute_dtype)
         if mesh is not None:
             self.params = jax.device_put(params, shd.replicated(mesh))
         self.device_steps = 0       # host dispatches (one per busy tick)
@@ -250,7 +259,7 @@ class _DiffusionLane:
         self.backend = backend
         self._raw_step = make_gen_scan_step(
             self.scan_steps, decomposed=self.decomposed, backend=backend,
-            interpret=self.interpret)
+            interpret=self.interpret, compute_dtype=self.compute_dtype)
         self._step, _ = self._jit_step(self.batch)
         self.compiled_sizes = set()
 
@@ -283,7 +292,7 @@ class _DiffusionLane:
     def _alloc(self, batch: int) -> None:
         self.batch = batch
         self._step, sh = self._jit_step(batch)
-        x = jnp.zeros((batch,) + self.image_shape, jnp.float32)
+        x = jnp.zeros((batch,) + self.image_shape, self._x_dtype)
         self.x = x if sh is None else jax.device_put(x, sh)
         self.slots: list[GenRequest | None] = [None] * batch
         self._traj: list[np.ndarray | None] = [None] * batch
@@ -310,7 +319,8 @@ class _DiffusionLane:
         self._traj[slot] = traj
         self._pos[slot] = 0
         self.active[slot] = True
-        self.x = self.x.at[slot].set(init_noise(req.seed, self.image_shape))
+        self.x = self.x.at[slot].set(
+            init_noise(req.seed, self.image_shape).astype(self.x.dtype))
 
     def release(self, slot: int) -> None:
         """Vacate a slot mid-flight (cancel/timeout): the slot is reusable
@@ -391,14 +401,16 @@ class _DCGANLane:
     scan_steps = 1
 
     def __init__(self, params: dict, *, batch: int, nz: int, backend: str,
-                 interpret: bool | None, decomposed: bool):
+                 interpret: bool | None, decomposed: bool,
+                 compute_dtype: str | None = None):
         self.params = params
         self.nz = nz
         self.backend = backend
         self.decomposed, self.interpret = decomposed, interpret
+        self.compute_dtype = compute_dtype
         self._step = jax.jit(functools.partial(
             dcgan.forward, decomposed=decomposed, backend=backend,
-            interpret=interpret))
+            interpret=interpret, compute_dtype=compute_dtype))
         self.device_steps = 0
         self.substeps = 0
         self.compiled_sizes: set[int] = set()
@@ -410,7 +422,7 @@ class _DCGANLane:
         self.backend = backend
         self._step = jax.jit(functools.partial(
             dcgan.forward, decomposed=self.decomposed, backend=backend,
-            interpret=self.interpret))
+            interpret=self.interpret, compute_dtype=self.compute_dtype))
         self.compiled_sizes = set()
 
     def corrupt(self, slot: int) -> None:
@@ -545,7 +557,8 @@ class GenServer:
                  max_retries: int = 3, retry_backoff_s: float = 0.05,
                  stuck_shed_after: int = 3, max_requeues: int = 1,
                  snapshot_dir: str | None = None, snapshot_every: int = 0,
-                 snapshot_keep: int = 3):
+                 snapshot_keep: int = 3,
+                 compute_dtype: str | None = None):
         if isinstance(scan_steps, str):
             if scan_steps != "auto":
                 raise ValueError(
@@ -557,6 +570,7 @@ class GenServer:
         self.backend = backend
         self.interpret = interpret
         self.decomposed = decomposed
+        self.compute_dtype = compute_dtype
         self.mesh = mesh
         self.spatial = spatial
         self.unet_widths, self.unet_hw, self.out_ch = unet_widths, unet_hw, out_ch
@@ -656,7 +670,8 @@ class GenServer:
             return lane
         p = self._init_params(workload)
         kw = dict(backend=self.backend, interpret=self.interpret,
-                  decomposed=self.decomposed, batch=batch or self.batch)
+                  decomposed=self.decomposed, batch=batch or self.batch,
+                  compute_dtype=self.compute_dtype)
         if workload == "unet_dec":
             lane = _DiffusionLane(
                 p, widths=self.unet_widths, hw=self.unet_hw,
@@ -680,8 +695,11 @@ class GenServer:
         callers must treat that as "no estimate", not zero cost."""
         if self.calibration is None:
             return None
+        dtype = ("float32" if self.compute_dtype is None
+                 else canon_dtype(self.compute_dtype).name)
         us = self.calibration.predict_layers(self._workload_layers(workload),
-                                             backend=self.backend)
+                                             backend=self.backend,
+                                             dtype=dtype)
         return None if us is None else us * max(steps, 1)
 
     def submit(self, workload: str, *, steps: int = 1, seed: int = 0,
@@ -947,7 +965,7 @@ class GenServer:
                      "scan_steps", "autoscale", "min_batch", "max_batch",
                      "shrink_patience", "starvation_ticks", "max_retries",
                      "retry_backoff_s", "stuck_shed_after", "max_requeues",
-                     "snapshot_every", "snapshot_keep")
+                     "snapshot_every", "snapshot_keep", "compute_dtype")
 
     def _snapshot_config(self) -> dict:
         cfg = {k: getattr(self, k) for k in self._CONFIG_ATTRS}

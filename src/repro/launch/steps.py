@@ -198,7 +198,8 @@ def ddim_timesteps(steps: int, t_max: int = DDIM_T_MAX) -> np.ndarray:
 
 
 def make_gen_step(*, t_max: int = DDIM_T_MAX, decomposed: bool = True,
-                  backend: str = "xla", interpret: bool | None = None):
+                  backend: str = "xla", interpret: bool | None = None,
+                  compute_dtype: str | None = None):
     """One deterministic (eta=0) DDIM step over the U-Net denoiser.
 
     Returns ``gen_step(params, x, batch) -> x'`` where ``x`` is the noisy
@@ -215,6 +216,12 @@ def make_gen_step(*, t_max: int = DDIM_T_MAX, decomposed: bool = True,
     ``x' = sqrt(ab') * x0_pred + sqrt(1 - ab') * eps``.  All timestep
     dependence is data, so one jitted instance serves every request mix;
     the caller donates ``x`` (``jax.jit(..., donate_argnums=(1,))``).
+
+    ``compute_dtype`` (e.g. ``"bf16"``) runs the denoiser forward in the
+    compute dtype; the DDIM update itself is evaluated in fp32 (the
+    schedule coefficients span ~1e-4 .. 1) and the result cast back to
+    ``x.dtype`` — without the cast the fp32 ``alpha_bar`` gather would
+    silently promote a bf16 lane back to fp32 on the first step.
     """
     from repro.models import unet_decoder
 
@@ -223,12 +230,16 @@ def make_gen_step(*, t_max: int = DDIM_T_MAX, decomposed: bool = True,
     def gen_step(params, x, batch):
         t, t_next, active = batch["t"], batch["t_next"], batch["active"]
         eps = unet_decoder.denoise(params, x, t, decomposed=decomposed,
-                                   backend=backend, interpret=interpret)
+                                   backend=backend, interpret=interpret,
+                                   compute_dtype=compute_dtype)
         ab_t = alpha_bar[t][:, None, None, None]
         ab_n = jnp.where(t_next >= 0, alpha_bar[jnp.maximum(t_next, 0)],
                          1.0)[:, None, None, None]
-        x0 = (x - jnp.sqrt(1.0 - ab_t) * eps) * jax.lax.rsqrt(ab_t)
-        x_new = jnp.sqrt(ab_n) * x0 + jnp.sqrt(1.0 - ab_n) * eps
+        xf = x.astype(jnp.float32)
+        ef = eps.astype(jnp.float32)
+        x0 = (xf - jnp.sqrt(1.0 - ab_t) * ef) * jax.lax.rsqrt(ab_t)
+        x_new = (jnp.sqrt(ab_n) * x0
+                 + jnp.sqrt(1.0 - ab_n) * ef).astype(x.dtype)
         return jnp.where(active[:, None, None, None], x_new, x)
 
     return gen_step
@@ -236,7 +247,8 @@ def make_gen_step(*, t_max: int = DDIM_T_MAX, decomposed: bool = True,
 
 def make_gen_scan_step(scan_steps: int, *, t_max: int = DDIM_T_MAX,
                        decomposed: bool = True, backend: str = "xla",
-                       interpret: bool | None = None):
+                       interpret: bool | None = None,
+                       compute_dtype: str | None = None):
     """``scan_steps`` fused DDIM steps per dispatch (``lax.scan``).
 
     Returns ``gen_scan_step(params, x, batch) -> x'`` where ``batch`` carries
@@ -258,7 +270,7 @@ def make_gen_scan_step(scan_steps: int, *, t_max: int = DDIM_T_MAX,
     if scan_steps < 1:
         raise ValueError(f"scan_steps must be >= 1, got {scan_steps}")
     step = make_gen_step(t_max=t_max, decomposed=decomposed, backend=backend,
-                         interpret=interpret)
+                         interpret=interpret, compute_dtype=compute_dtype)
 
     def gen_scan_step(params, x, batch):
         # (B, K) -> (K, B): scan iterates substeps, each seeing one column

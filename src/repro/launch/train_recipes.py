@@ -1,0 +1,134 @@
+"""Mixed-precision train recipes for the conv workloads (DESIGN.md §12).
+
+One recipe per decomposition workload — ENet / ESPNet (segmentation NLL)
+and the DCGAN generator (pixel regression smoke objective) — each wiring
+the same four-part bf16 contract around the model's ``forward``:
+
+* **fp32 masters**: parameters (and AdamW state) stay fp32; the forward
+  casts per-layer via ``compute_dtype`` so only activations are bf16;
+* **fp32 loss**: logits/images are promoted to fp32 before the reduction,
+  so the objective itself never rounds in bf16;
+* **dynamic loss scaling** (:class:`repro.optim.DynamicLossScale`): the
+  loss is amplified before ``grad`` and the gradients divided after;
+* **skip-on-nonfinite**: a step whose unscaled gradients contain inf/nan
+  applies *no* update (params and optimizer state pass through bitwise via
+  :func:`repro.optim.select_tree`) and backs the scale off.
+
+``compute_dtype=None`` degenerates to the plain fp32 step (the scaler
+still runs, at scale 1 if configured so) — the parity tests train both
+and compare.  Everything jits into ONE step function; the skip logic is
+branchless so a skipped step costs the same dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dcgan, enet, espnet
+from repro.optim import (DynamicLossScale, LossScaleState, adamw_init,
+                         adamw_update, select_tree)
+
+#: workloads with a recipe here (DCGAN trains the generator alone against a
+#: pixel target — the adversarial game is out of scope for a step recipe).
+RECIPES = ("enet", "espnet", "dcgan")
+
+
+class TrainState(NamedTuple):
+    """Everything one recipe step threads: fp32 params + AdamW + scaler."""
+    params: dict
+    opt: object
+    scale: LossScaleState
+
+
+def _seg_loss(forward, params, batch, **fw_kw):
+    """Mean per-pixel NLL, reduced in fp32 regardless of compute dtype."""
+    logits = forward(params, batch["image"], **fw_kw)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["label"][..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def _gen_loss(params, batch, **fw_kw):
+    """Generator pixel-regression smoke objective (fp32 reduction)."""
+    img = dcgan.forward(params, batch["z"], **fw_kw)
+    err = img.astype(jnp.float32) - batch["target"].astype(jnp.float32)
+    return jnp.mean(jnp.square(err))
+
+
+def _loss_fn(model: str, *, backend: str, decomposed: bool,
+             interpret: bool | None, compute_dtype: str | None):
+    if model == "enet":
+        kw = dict(backend=backend, decomposed=decomposed,
+                  compute_dtype=compute_dtype)
+        return functools.partial(_seg_loss, enet.forward, **kw)
+    if model == "espnet":
+        kw = dict(backend=backend, decomposed=decomposed,
+                  compute_dtype=compute_dtype)
+        return functools.partial(_seg_loss, espnet.forward, **kw)
+    if model == "dcgan":
+        kw = dict(backend=backend, decomposed=decomposed,
+                  interpret=interpret, compute_dtype=compute_dtype)
+        return functools.partial(_gen_loss, **kw)
+    raise ValueError(f"unknown recipe {model!r}; known: {RECIPES}")
+
+
+def init_state(params: dict,
+               scaler: DynamicLossScale | None = None) -> TrainState:
+    """fp32 masters + AdamW state + loss-scale state for a recipe step."""
+    params = jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32), params)
+    scaler = scaler or DynamicLossScale()
+    return TrainState(params, adamw_init(params), scaler.init())
+
+
+def make_train_step(model: str, *, backend: str = "xla",
+                    decomposed: bool = True, interpret: bool | None = None,
+                    compute_dtype: str | None = None,
+                    scaler: DynamicLossScale | None = None,
+                    lr: float = 1e-3, weight_decay: float = 1e-4):
+    """Jitted ``step(state, batch) -> (state', metrics)`` for one recipe.
+
+    ``batch`` is ``{"image", "label"}`` for the segmentation recipes and
+    ``{"z", "target"}`` for the generator.  Metrics: ``loss`` (unscaled,
+    fp32), ``grad_norm`` (of the *applied* gradients; 0 on a skipped
+    step), ``scale`` (loss scale after the update), ``skipped`` (1.0 when
+    non-finite gradients suppressed the update).
+    """
+    scaler = scaler or DynamicLossScale()
+    loss_fn = _loss_fn(model, backend=backend, decomposed=decomposed,
+                       interpret=interpret, compute_dtype=compute_dtype)
+
+    @jax.jit
+    def step(state: TrainState, batch: dict):
+        def scaled_loss(p):
+            loss = loss_fn(p, batch)
+            return scaler.scale(state.scale, loss), loss
+
+        (_, loss), grads = jax.value_and_grad(scaled_loss,
+                                              has_aux=True)(state.params)
+        grads = scaler.unscale(state.scale, grads)
+        finite = scaler.all_finite(grads)
+        # a non-finite gradient must not reach the AdamW moments: zero the
+        # grads before the update, then discard the whole update anyway
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, grads)
+        safe = select_tree(finite, grads, zeros)
+        new_params, new_opt, gnorm = adamw_update(
+            safe, state.opt, state.params, lr=jnp.float32(lr),
+            weight_decay=weight_decay)
+        new_params = select_tree(finite, new_params, state.params)
+        new_opt = select_tree(finite, new_opt, state.opt)
+        scale_state = scaler.update(state.scale, finite)
+        metrics = {"loss": loss,
+                   "grad_norm": jnp.where(finite, gnorm, 0.0),
+                   "scale": scale_state.scale,
+                   "skipped": 1.0 - finite.astype(jnp.float32)}
+        return TrainState(new_params, new_opt, scale_state), metrics
+
+    return step
+
+
+__all__ = ["RECIPES", "TrainState", "init_state", "make_train_step"]

@@ -74,24 +74,37 @@ def init_params(key, size: int = 64, nz: int = 100, ngf: int = 64,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("decomposed", "backend", "interpret"))
+                   static_argnames=("decomposed", "backend", "interpret",
+                                    "compute_dtype"))
 def forward(params: dict, z: jax.Array, decomposed: bool = True,
-            backend: str = "xla", interpret: bool | None = None) -> jax.Array:
+            backend: str = "xla", interpret: bool | None = None,
+            compute_dtype: str | None = None) -> jax.Array:
     """z: (N, nz) latents -> (N, size, size, out_ch) images in (-1, 1).
 
     Every stage is ``k=4, s=2, p_lo=2, output_padding=0`` (exact 2x); the
     BN/ReLU epilogue is fused into the transposed kernel's output pass.
     ``decomposed=False`` is the measured zero-laden baseline (xla only).
+
+    ``compute_dtype`` (static, e.g. ``"bf16"``): the latent projection and
+    every transposed stage run in the compute dtype while params stay fp32
+    masters (DESIGN.md §12); the tanh image comes back in it.
     """
+    cd = compute_dtype
     n_up = 1 + sum(1 for k in params if k.startswith("up"))
     alpha = jnp.asarray(_RELU_SLOPE, jnp.float32)
+    if cd is not None:
+        from repro.kernels.util import canon_dtype
+
+        z = z.astype(canon_dtype(cd))
     # latent projection: a matmul, recorded as the 1x1-conv-equivalent
-    # workload in gen_spec; its BN/ReLU runs as the epilogue oracle
-    h = (z @ params["proj"]).reshape(z.shape[0], 4, 4, -1)
+    # workload in gen_spec; its BN/ReLU runs as the epilogue oracle.  The
+    # matmul casts the fp32 master to z.dtype so bf16 z is not promoted.
+    h = (z @ params["proj"].astype(z.dtype)).reshape(z.shape[0], 4, 4, -1)
     sc, sh = _fold_bn(params["proj_bn"])
     h = apply_reference(_EP_BN_ACT, h, (sc, sh, alpha))
     kw = dict(stride=2, transposed=True, padding=2, output_padding=0,
-              decomposed=decomposed, backend=backend, interpret=interpret)
+              decomposed=decomposed, backend=backend, interpret=interpret,
+              compute_dtype=cd)
     for i in range(1, n_up):
         sc, sh = _fold_bn(params[f"bn{i}"])
         h = conv2d(h, params[f"up{i}"], epilogue=_EP_BN_ACT, scale=sc,

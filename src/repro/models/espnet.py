@@ -60,7 +60,8 @@ def _esp_init(key, cin: int, cout: int, dtype=jnp.float32) -> dict:
 
 
 def _esp(p: dict, x: jax.Array, stride: int = 1, decomposed: bool = True,
-         strategy: str = "batched", backend: str = "xla") -> jax.Array:
+         strategy: str = "batched", backend: str = "xla",
+         compute_dtype=None) -> jax.Array:
     """ESP module: reduce -> K parallel dilated branches -> HFF -> concat.
 
     ``stride=2`` is the downsampling ESP: every branch is a *strided* dilated
@@ -68,15 +69,17 @@ def _esp(p: dict, x: jax.Array, stride: int = 1, decomposed: bool = True,
     dense conv (no decomposition to apply).  HFF (hierarchical feature
     fusion) adds branch outputs cumulatively before concatenation.
     """
-    h = conv2d(x, p["reduce"], backend=backend)
+    cd = compute_dtype
+    h = conv2d(x, p["reduce"], backend=backend, compute_dtype=cd)
     outs = []
     for d in ESP_DILATIONS:
         if d == 1:
-            outs.append(conv2d(h, p[f"br{d}"], stride=stride, backend=backend))
+            outs.append(conv2d(h, p[f"br{d}"], stride=stride, backend=backend,
+                               compute_dtype=cd))
         else:
             outs.append(conv2d(h, p[f"br{d}"], dilation=d, stride=stride,
                                decomposed=decomposed, strategy=strategy,
-                               backend=backend))
+                               backend=backend, compute_dtype=cd))
     acc, fused = outs[0], [outs[0]]
     for o in outs[1:]:              # HFF: cumulative sums de-grid the pyramid
         acc = acc + o
@@ -112,29 +115,43 @@ def init_params(key, num_classes: int = 19, alpha2: int = 2, alpha3: int = 3,
 
 @functools.partial(jax.jit,
                    static_argnames=("decomposed", "strategy", "backend",
-                                    "alpha2", "alpha3"))
+                                    "alpha2", "alpha3", "compute_dtype"))
 def forward(params: dict, x: jax.Array, decomposed: bool = True,
             strategy: str = "batched", backend: str = "xla",
-            alpha2: int = 2, alpha3: int = 3) -> jax.Array:
-    """x: (N, H, W, 3) -> logits (N, H, W, classes).  H, W divisible by 8."""
-    kw = dict(decomposed=decomposed, strategy=strategy, backend=backend)
+            alpha2: int = 2, alpha3: int = 3,
+            compute_dtype: str | None = None) -> jax.Array:
+    """x: (N, H, W, 3) -> logits (N, H, W, classes).  H, W divisible by 8.
+
+    ``compute_dtype`` (static, e.g. ``"bf16"``): activations flow in the
+    compute dtype through every ESP branch and decoder deconv while params
+    stay fp32 masters (DESIGN.md §12).
+    """
+    cd = compute_dtype
+    if cd is not None:
+        from repro.kernels.util import canon_dtype
+
+        x = x.astype(canon_dtype(cd))
+    kw = dict(decomposed=decomposed, strategy=strategy, backend=backend,
+              compute_dtype=cd)
     sc, sh = _fold_bn(params["stem_bn"])
     h = conv2d(x, params["stem"], stride=2, backend=backend,     # H/2
                epilogue=_EP_BN_ACT, scale=sc, shift=sh,
-               alpha=params["stem_a"])
+               alpha=params["stem_a"], compute_dtype=cd)
     h = _esp(params["down1"], h, stride=2, **kw)                 # H/4, 64
     for i in range(alpha2):
         h = _esp(params[f"l2_{i}"], h, **kw)
-    skip = conv2d(h, params["skip2"], backend=backend)           # H/4, C
+    skip = conv2d(h, params["skip2"], backend=backend,           # H/4, C
+                  compute_dtype=cd)
     h = _esp(params["down2"], h, stride=2, **kw)                 # H/8, 128
     for i in range(alpha3):
         h = _esp(params[f"l3_{i}"], h, **kw)
-    h = conv2d(h, params["head"], backend=backend)               # H/8, C
+    h = conv2d(h, params["head"], backend=backend, compute_dtype=cd)  # H/8, C
     # decoder skip-add fuses into the transposed kernel's output pass
     h = conv2d(h, params["up1"], stride=2, transposed=True, output_padding=1,
                decomposed=decomposed, backend=backend,
-               epilogue=_EP_RES, residual=skip)                  # H/4
+               epilogue=_EP_RES, residual=skip, compute_dtype=cd)  # H/4
     h = conv2d(h, params["up2"], stride=2, transposed=True, output_padding=1,
-               decomposed=decomposed, backend=backend)           # H/2
+               decomposed=decomposed, backend=backend, compute_dtype=cd)  # H/2
     return conv2d(h, params["up3"], stride=2, transposed=True,
-                  output_padding=1, decomposed=decomposed, backend=backend)
+                  output_padding=1, decomposed=decomposed, backend=backend,
+                  compute_dtype=cd)

@@ -73,20 +73,32 @@ def init_params(key, widths: tuple[int, ...] = UNET_WIDTHS,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("decomposed", "backend", "interpret"))
+                   static_argnames=("decomposed", "backend", "interpret",
+                                    "compute_dtype"))
 def forward(params: dict, x: jax.Array, skips: tuple[jax.Array, ...],
             decomposed: bool = True, backend: str = "xla",
-            interpret: bool | None = None) -> jax.Array:
+            interpret: bool | None = None,
+            compute_dtype: str | None = None) -> jax.Array:
     """x: (N, H, W, widths[0]) mid features; skips[i] at level i's extent.
 
     Per level: skip-concat -> 3x3 conv (folded-GN + PReLU epilogue) -> 3x3
     conv (same) -> even-k stride-2 transposed upsample (PReLU epilogue).
     Returns (N, H * 2**levels, W * 2**levels, out_ch).
+
+    ``compute_dtype`` (static, e.g. ``"bf16"``) casts mid features and every
+    skip once; activations then flow in the compute dtype with fp32 masters
+    and fp32 kernel accumulators (DESIGN.md §12).
     """
     levels = sum(1 for k in params if k.endswith("_up"))
     if len(skips) != levels:
         raise ValueError(f"{len(skips)} skips for {levels} levels")
+    cd = compute_dtype
     h = x
+    if cd is not None:
+        from repro.kernels.util import canon_dtype
+
+        h = h.astype(canon_dtype(cd))
+        skips = tuple(s.astype(canon_dtype(cd)) for s in skips)
     for i in range(levels):
         k = UNET_UP_KERNELS[i % len(UNET_UP_KERNELS)]
         h = jnp.concatenate([h, skips[i]], axis=-1)
@@ -94,12 +106,14 @@ def forward(params: dict, x: jax.Array, skips: tuple[jax.Array, ...],
             sc, sh = _fold_gn(params[f"l{i}_gn{j}"])
             h = conv2d(h, params[f"l{i}_conv{j}"], backend=backend,
                        interpret=interpret, epilogue=_EP_GN_ACT, scale=sc,
-                       shift=sh, alpha=params[f"l{i}_a{j}"])
+                       shift=sh, alpha=params[f"l{i}_a{j}"],
+                       compute_dtype=cd)
         h = conv2d(h, params[f"l{i}_up"], stride=2, transposed=True,
                    padding=k // 2, output_padding=0, decomposed=decomposed,
                    backend=backend, interpret=interpret, epilogue=_EP_ACT,
-                   alpha=params[f"l{i}_aup"])
-    return conv2d(h, params["head"], backend=backend, interpret=interpret)
+                   alpha=params[f"l{i}_aup"], compute_dtype=cd)
+    return conv2d(h, params["head"], backend=backend, interpret=interpret,
+                  compute_dtype=cd)
 
 
 # ---------------------------------------------------------------------------
@@ -143,10 +157,12 @@ def init_denoiser_params(key, widths: tuple[int, ...] = UNET_WIDTHS,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("decomposed", "backend", "interpret"))
+                   static_argnames=("decomposed", "backend", "interpret",
+                                    "compute_dtype"))
 def denoise(params: dict, x_t: jax.Array, t: jax.Array,
             decomposed: bool = True, backend: str = "xla",
-            interpret: bool | None = None) -> jax.Array:
+            interpret: bool | None = None,
+            compute_dtype: str | None = None) -> jax.Array:
     """Predict the noise in ``x_t`` (N, S, S, C) at timesteps ``t`` (N,).
 
     ``S`` must be ``hw * 2**levels`` for the decoder's mid extent ``hw``
@@ -155,13 +171,22 @@ def denoise(params: dict, x_t: jax.Array, t: jax.Array,
     levels = sum(1 for k in params if k.startswith("enc"))
     s = x_t.shape[1]
     hw = s >> levels
+    if compute_dtype is not None:
+        from repro.kernels.util import canon_dtype
+
+        x_t = x_t.astype(canon_dtype(compute_dtype))
     emb = timestep_embedding(t, params["t_w1"].shape[0])
-    cond = jnp.tanh(emb.astype(x_t.dtype) @ params["t_w1"]) @ params["t_w2"]
-    kw = dict(backend=backend, interpret=interpret)
+    # cast the fp32 MLP masters down to x_t's dtype: with a bf16 x_t a
+    # bf16 @ fp32 matmul would silently promote cond (and then mid) to fp32
+    cond = (jnp.tanh(emb.astype(x_t.dtype) @ params["t_w1"].astype(x_t.dtype))
+            @ params["t_w2"].astype(x_t.dtype))
+    kw = dict(backend=backend, interpret=interpret,
+              compute_dtype=compute_dtype)
     mid = conv2d(_avg_pool(x_t, s // hw), params["stem"], **kw)
     mid = mid + cond[:, None, None, :]
     skips = tuple(
         conv2d(_avg_pool(x_t, s // (hw * 2 ** i)), params[f"enc{i}"], **kw)
         for i in range(levels))
     return forward(params["dec"], mid, skips, decomposed=decomposed,
-                   backend=backend, interpret=interpret)
+                   backend=backend, interpret=interpret,
+                   compute_dtype=compute_dtype)

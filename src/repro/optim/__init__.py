@@ -1,4 +1,7 @@
 from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.loss_scale import (DynamicLossScale, LossScaleState,
+                                    select_tree)
 from repro.optim.schedules import cosine_schedule, linear_warmup
 
-__all__ = ["adamw_init", "adamw_update", "cosine_schedule", "linear_warmup"]
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule", "linear_warmup",
+           "DynamicLossScale", "LossScaleState", "select_tree"]

@@ -1,0 +1,90 @@
+"""Dynamic loss scaling for bf16 training (DESIGN.md §12).
+
+bf16 keeps fp32's exponent range, so classic fp16-style underflow is rare —
+but tiny late-layer gradients still lose mantissa bits, and a single
+overflowing step (inf/nan from a degenerate batch) must not corrupt the
+fp32 master weights.  The standard recipe handles both:
+
+* the loss is multiplied by ``scale`` before ``grad`` (so the backward pass
+  carries amplified values), and the gradients are divided by it after;
+* if any unscaled gradient is non-finite, the step is *skipped* and the
+  scale halves (``backoff``);
+* after ``growth_interval`` consecutive finite steps the scale doubles,
+  probing the headroom back.
+
+All state transitions are branchless (``jnp.where``) so the update jits
+into the train step.  The scaler is a frozen config dataclass +
+:class:`LossScaleState` NamedTuple — the same pattern as
+``repro.optim.adamw`` (functional, pytree-friendly).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LossScaleState(NamedTuple):
+    """Dynamic-scale state: the current scale and the finite-step streak."""
+    scale: jax.Array        # fp32 scalar
+    good_steps: jax.Array   # int32 scalar — consecutive finite steps
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicLossScale:
+    """Config + pure transition functions of the dynamic loss scaler."""
+
+    init_scale: float = 2.0 ** 15
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    growth_interval: int = 200      # finite steps between growth probes
+    min_scale: float = 1.0
+    max_scale: float = 2.0 ** 24
+
+    def init(self) -> LossScaleState:
+        return LossScaleState(jnp.asarray(self.init_scale, jnp.float32),
+                              jnp.zeros((), jnp.int32))
+
+    def scale(self, state: LossScaleState, loss: jax.Array) -> jax.Array:
+        """Amplify the loss (in fp32) before differentiation."""
+        return loss.astype(jnp.float32) * state.scale
+
+    def unscale(self, state: LossScaleState, grads):
+        """Divide a gradient pytree by the current scale (in fp32)."""
+        inv = 1.0 / state.scale
+        return jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) * inv, grads)
+
+    @staticmethod
+    def all_finite(grads) -> jax.Array:
+        """Scalar bool: every element of every leaf is finite."""
+        leaves = jax.tree_util.tree_leaves(grads)
+        if not leaves:
+            return jnp.asarray(True)
+        return jnp.all(jnp.stack([jnp.all(jnp.isfinite(g)) for g in leaves]))
+
+    def update(self, state: LossScaleState,
+               finite: jax.Array) -> LossScaleState:
+        """Branchless post-step transition: backoff, hold, or grow."""
+        grown = state.good_steps + 1 >= self.growth_interval
+        next_scale = jnp.where(
+            finite,
+            jnp.where(grown, state.scale * self.growth_factor, state.scale),
+            state.scale * self.backoff_factor)
+        next_scale = jnp.clip(next_scale, self.min_scale, self.max_scale)
+        next_good = jnp.where(finite & ~grown, state.good_steps + 1, 0)
+        return LossScaleState(next_scale.astype(jnp.float32),
+                              next_good.astype(jnp.int32))
+
+
+def select_tree(pred: jax.Array, on_true, on_false):
+    """``jnp.where`` over matching pytrees — applies a step conditionally
+    (skipped steps keep params/optimizer state bit-identical)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+__all__ = ["DynamicLossScale", "LossScaleState", "select_tree"]

@@ -141,6 +141,61 @@ def test_corrupt_cache_file_is_ignored(cache_dir):
     assert at.get_tiles("dense", **GEOM) == at.DEFAULT_TILES
 
 
+def test_epilogue_key_separates_fused_configs(cache_dir, monkeypatch):
+    """Schema-2 regression pin: one geometry tuned bare and with a fused
+    residual must land in DISTINCT cache entries with their own winners.
+    Pre-fix, ``make_key`` ignored the epilogue, so whichever configuration
+    tuned second overwrote the first and both lookups served one winner.
+    """
+    from repro.kernels.epilogue import EpilogueSpec, fingerprint
+
+    spec = EpilogueSpec(residual="post_act")
+    assert fingerprint(None) == "none"
+    assert fingerprint(spec) == "bn0.pr0.res-post_act"
+    k_plain = at.make_key("dense", **GEOM)
+    k_res = at.make_key("dense", **GEOM, epilogue=spec)
+    assert k_plain != k_res
+
+    # deterministic synthetic timings: the bare tune's first candidate
+    # wins, the fused tune's second — distinct winners prove no overwrite
+    times = iter([1.0, 2.0, 2.0, 1.0])
+    monkeypatch.setattr(at, "_time_candidate",
+                        lambda call, iters: next(times))
+    cands = [(4, 64), (8, 64)]
+    assert at.tune("dense", **GEOM, cands=cands, iters=1) == (4, 64)
+    assert at.tune("dense", **GEOM, cands=cands, iters=1,
+                   epilogue=spec) == (8, 64)
+    raw = json.loads(at.cache_path().read_text())
+    assert raw["entries"][k_plain] == [4, 64]
+    assert raw["entries"][k_res] == [8, 64]
+
+    # a fresh process keeps serving each configuration its own winner
+    at.clear_memory_cache()
+    monkeypatch.setattr(at, "_time_candidate",
+                        lambda *a, **k: pytest.fail("re-timed a cache hit"))
+    assert at.get_tiles("dense", **GEOM) == (4, 64)
+    assert at.get_tiles("dense", **GEOM, epilogue=spec) == (8, 64)
+
+
+def test_policy_times_top_plus_default(cache_dir, monkeypatch):
+    """The default tune() path times at most POLICY_TOP + DEFAULT_TILES of
+    a large grid — the analytic policy replaced the exhaustive sweep."""
+    timed = []
+    monkeypatch.setattr(
+        at, "_time_candidate",
+        lambda call, iters: timed.append(1) or float(len(timed)))
+    cands = at.candidates(h_out=64, cout=512)       # full 4x3 grid
+    assert len(cands) == 12
+    at.tune("dense", (1, 64, 64, 16), (3, 3, 16, 512), cands=cands, iters=1)
+    assert len(timed) <= at.POLICY_TOP + 1
+
+    # REPRO_AUTOTUNE_SWEEP=1 forces the old exhaustive behaviour
+    monkeypatch.setenv("REPRO_AUTOTUNE_SWEEP", "1")
+    timed.clear()
+    at.tune("dense", (1, 64, 64, 16), (3, 3, 16, 512), cands=cands, iters=1)
+    assert len(timed) == len(cands)
+
+
 def test_dispatcher_resolves_tiles_through_autotune(cache_dir, monkeypatch):
     """decompose.conv2d consults the table when th/tc are unset."""
     import jax

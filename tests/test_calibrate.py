@@ -67,6 +67,52 @@ def test_save_load_round_trip(tmp_path):
     assert loaded.to_payload() == calib.to_payload()
 
 
+def test_fit_key_separates_dtypes():
+    """Schema-2 regression pin: fp32 and bf16 measurements of the same
+    (kind, backend, device) must fit under DISTINCT keys with their own
+    slopes.  Pre-fix the key had no dtype segment, so bf16 samples were
+    pooled into the fp32 fit and every prediction was dtype-blind.
+    """
+    s32 = _samples(a=0.5, b=10.0)
+    s16 = [cal.Sample("dense", "xla", "testdev", f"b{i}", c, 0.25 * c + 10.0,
+                      dtype="bfloat16")
+           for i, c in enumerate((1e3, 5e3, 2e4, 1e5))]
+    calib = cal.Calibration.fit(s32 + s16)
+    k32 = cal.key_of("dense", "xla", "testdev")
+    k16 = cal.key_of("dense", "xla", "testdev", "bfloat16")
+    assert k32 != k16
+    assert calib.coeffs[k32].a_us_per_cycle == pytest.approx(0.5)
+    assert calib.coeffs[k16].a_us_per_cycle == pytest.approx(0.25)
+    assert calib.predict("dense", 2e4, backend="xla", device_kind="testdev",
+                         dtype="bfloat16") == pytest.approx(0.25 * 2e4 + 10)
+
+
+def test_schema1_payload_upgrades_to_float32_keys():
+    """A pre-dtype (schema-1) cache loads with its 3-segment keys mapped to
+    ``.../float32`` — old on-disk calibrations stay usable after the fix."""
+    calib = cal.Calibration.fit(_samples(a=0.5, b=10.0))
+    payload = calib.to_payload()
+    assert payload["schema"] == 2
+    legacy = {"schema": 1,
+              "coeffs": {"dense/xla/testdev":
+                         payload["coeffs"][cal.key_of("dense", "xla",
+                                                      "testdev")]}}
+    loaded = cal.Calibration.from_payload(legacy)
+    assert set(loaded.coeffs) == {cal.key_of("dense", "xla", "testdev")}
+    assert loaded.predict("dense", 2e4, backend="xla",
+                          device_kind="testdev") == pytest.approx(1.001e4)
+
+
+def test_unfitted_dtype_falls_back_to_fp32_fit():
+    """bf16 predictions fall back to the fp32 fit (a conservative upper
+    bound) instead of refusing, when only fp32 was captured."""
+    calib = cal.Calibration.fit(_samples(a=0.5, b=10.0))
+    assert calib.predict("dense", 2e4, backend="xla", device_kind="testdev",
+                         dtype="bfloat16") == pytest.approx(1.001e4)
+    assert calib.predict("dense", 2e4, backend="pallas",
+                         device_kind="testdev", dtype="bfloat16") is None
+
+
 # ------------------------------------------------------------ error report --
 
 def test_error_report_schema_and_perfect_fit():
