@@ -20,7 +20,9 @@ Three entry families, with per-family tolerances (all relative):
   p50/p99 request latency and host dispatches per image of the
   ``serve.*`` drains.  Wall-derived, so gated at the same loose tolerance
   class as **ratio** (``--serve-tol``) and skipped across
-  ``(backend, device kind)`` changes.
+  ``(backend, device kind)`` changes; the sharded ``serve.mesh_d<N>``
+  scaling rows are additionally skipped when the two files' simulated
+  ``device_count`` differs (DESIGN.md §13).
 * **mixed** — the ``mixed_precision`` section (DESIGN.md §12): bf16/fp32
   wall ratio per engine and the analytic-policy-vs-sweep ``time_ratio``.
   Wall-derived; gated at the **ratio** tolerance and skipped cross-host.
@@ -148,6 +150,19 @@ def compare(cur: dict, base: dict, *, model_tol: float = 0.01,
                 violations.append(
                     f"[{family}] {name}: {bval:.4g} -> {cval:.4g} "
                     f"({100 * drift:.1f}% drift > {100 * tol:.0f}% tol)")
+
+    # sharded serve.mesh_d<N> rows only compare at equal mesh size — a CI
+    # change to the fake-device count must not read as a latency regression
+    if cur.get("device_count") != base.get("device_count"):
+        mesh = [n for n in set(base_e["serve"]) | set(cur_e["serve"])
+                if n.startswith("serve.mesh")]
+        if mesh:
+            notes.append(
+                f"{len(mesh)} serve.mesh entries skipped: device_count "
+                f"{base.get('device_count')} -> {cur.get('device_count')}")
+        for n in mesh:
+            base_e["serve"].pop(n, None)
+            cur_e["serve"].pop(n, None)
 
     rel_gate("model", model_tol)
     if wall_ok:

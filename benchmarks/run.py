@@ -49,7 +49,8 @@ def _ratios(rows: list[tuple]) -> dict:
 #: latency trajectory (``perf_gate.py`` gates them at wall-ratio tolerance);
 #: restore/degraded keys come from the fault-tolerance rows (DESIGN.md §11)
 _SERVE_KEYS = ("p50_us", "p99_us", "dispatches_per_image",
-               "restore_us", "recovered_imgs_per_s", "degraded_imgs_per_s")
+               "restore_us", "recovered_imgs_per_s", "degraded_imgs_per_s",
+               "imgs_per_s")
 
 
 def _serve_latency(rows: list[tuple]) -> dict:
@@ -119,6 +120,9 @@ def main(argv: list[str] | None = None) -> None:
             "generated_unix": time.time(),
             "backend": jax.default_backend(),
             "device_kind": jax.devices()[0].device_kind,
+            # sharded serve.mesh_d<N> rows are only comparable at equal
+            # mesh size; perf_gate skips them when this differs
+            "device_count": len(jax.devices()),
             "jax_version": jax.__version__,
             "smoke": ns.smoke,
             "rows": [{"name": n, "us_per_call": round(u, 1), "derived": d}

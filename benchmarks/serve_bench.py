@@ -191,6 +191,90 @@ def _fault_rows(rows: list, *, widths, hw, nz, ngf, n_req, steps) -> None:
         f"recoveries={st['recoveries']:.0f}"))
 
 
+def _mesh_rows(rows: list, smoke: bool) -> None:
+    """Sharded-drain scaling rows (DESIGN.md §13): one ``serve.mesh_d<N>``
+    row per device count, lanes spanning an N-device ``(data,)`` mesh via
+    the ``image_sharding`` hook.  Emitted only when several devices exist
+    (CI runs this under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    and merges the rows into the main ``BENCH_<rev>.json`` with
+    ``--merge-json``); each drain's images are asserted bitwise-equal to
+    the 1-device drain — scaling must never buy a different sample."""
+    import numpy as np
+
+    from repro.launch.mesh import make_train_mesh
+    from repro.launch.serve_gen import GenServer
+
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return
+    batch, n_req = 8, 6
+    widths, hw = ((8, 8), 4) if smoke else ((16, 8, 8), 4)
+    steps = (4, 2, 3)
+    ref_imgs = None
+    for nd in (1, 2, 4, 8):
+        if nd > n_dev or batch % nd:
+            continue
+        server = GenServer(batch=batch, unet_widths=widths, unet_hw=hw,
+                           dcgan_nz=16, dcgan_ngf=4, scan_steps=SCAN_STEPS,
+                           mesh=make_train_mesh(nd))
+        for i in range(n_req):
+            server.submit("unet_dec", steps=steps[i % len(steps)], seed=i)
+        t0 = time.perf_counter()
+        images = server.run()
+        wall = time.perf_counter() - t0
+        st = server.stats()
+        assert len(images) == n_req, (nd, len(images))
+        if ref_imgs is None:
+            ref_imgs = images
+        else:
+            for rid in ref_imgs:
+                assert np.array_equal(images[rid], ref_imgs[rid]), (nd, rid)
+        rows.append((
+            f"serve.mesh_d{nd}",
+            wall / max(st["device_steps"], 1) * 1e6,
+            f"devices={nd},imgs_per_s={st['images_per_s']:.2f},"
+            f"warm_imgs_per_s={st['warm_images_per_s']:.2f},reqs={n_req},"
+            f"p50_us={st['latency_p50_s'] * 1e6:.0f},"
+            f"p99_us={st['latency_p99_s'] * 1e6:.0f},"
+            f"dispatches_per_image={st['device_steps'] / n_req:.2f}"))
+
+
+def merge_json(rows: list, path: str | None = None) -> str:
+    """Fold freshly measured rows into an existing ``BENCH_<rev>.json``.
+
+    The CI mesh step runs this benchmark under 8 fake devices AFTER the
+    main single-device ``benchmarks/run.py --smoke`` wrote its JSON; the
+    sharded scaling rows belong in the same trajectory file, so they are
+    appended here (replacing same-name rows) and the ``serve_latency``
+    section re-derived.  ``device_count`` is stamped so ``perf_gate.py``
+    can skip mesh rows across mesh-size changes.
+    """
+    import json
+
+    from benchmarks.perf_gate import newest_bench
+    from benchmarks.run import _serve_latency
+
+    path = path or newest_bench()
+    if path is None:
+        raise SystemExit("--merge-json: no BENCH_*.json in cwd "
+                         "(run benchmarks/run.py --smoke first)")
+    with open(path) as f:
+        payload = json.load(f)
+    fresh = {name: (name, us, derived) for name, us, derived in rows}
+    kept = [r for r in payload.get("rows", [])
+            if r.get("name") not in fresh]
+    payload["rows"] = kept + [
+        {"name": n, "us_per_call": round(u, 1), "derived": d}
+        for n, u, d in rows]
+    merged = [(r["name"], r["us_per_call"], r["derived"])
+              for r in payload["rows"]]
+    payload["serve_latency"] = _serve_latency(merged)
+    payload["device_count"] = len(jax.devices())
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
 def _model_rows(rows: list) -> None:
     for name, fn in GEN_WORKLOADS.items():
         # per-row timer: a shared t0 would fold every earlier workload's
@@ -220,10 +304,15 @@ def _model_rows(rows: list) -> None:
             f"recovery_ms_worst={srv['recovery_ms_worst']:.1f}"))
 
 
-def run(csv: bool = False, smoke: bool = False) -> list[tuple]:
+def run(csv: bool = False, smoke: bool = False,
+        mesh_only: bool = False) -> list[tuple]:
     rows: list[tuple] = []
-    _measured_rows(rows, smoke)
-    _model_rows(rows)
+    if mesh_only:
+        _mesh_rows(rows, smoke)
+    else:
+        _measured_rows(rows, smoke)
+        _mesh_rows(rows, smoke)
+        _model_rows(rows)
     if not csv:
         print(f"== Generative serving (backend={jax.default_backend()}"
               f"{'; smoke' if smoke else ''}) ==")
@@ -239,9 +328,20 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny widths / fewer requests (CI tier-1)")
     ap.add_argument("--csv", action="store_true", help="CSV rows only")
+    ap.add_argument("--mesh-only", action="store_true",
+                    help="only the sharded serve.mesh_d<N> scaling rows "
+                         "(run under XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=8)")
+    ap.add_argument("--merge-json", action="store_true",
+                    help="append/replace this run's rows in the newest "
+                         "BENCH_<rev>.json and re-derive serve_latency")
     ns = ap.parse_args()
-    out = run(csv=ns.csv, smoke=ns.smoke)
+    out = run(csv=ns.csv, smoke=ns.smoke, mesh_only=ns.mesh_only)
     if ns.csv:
         print("name,us_per_call,derived")
         for name, us, derived in out:
             print(f"{name},{us:.1f},{derived}")
+    if ns.merge_json:
+        import sys
+        print(f"merged {len(out)} row(s) into {merge_json(out)}",
+              file=sys.stderr)

@@ -314,7 +314,7 @@ def report(layers: list[ConvLayer]) -> dict[str, float]:
 def serve_report(layers: list[ConvLayer], *, steps: int = 1,
                  batch: int = 1, scan_steps: int = 1,
                  steps_list: list[int] | None = None, calibration=None,
-                 backend: str = "xla",
+                 backend: str = "xla", devices: int = 1,
                  snapshot_every: int = 0) -> dict[str, float]:
     """Steady-state serving cost of an iterative sampler on the array.
 
@@ -354,11 +354,20 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
     ``recovery_ticks_worst`` / ``recovery_ms_worst`` (array cycles) and,
     with a calibration, ``calibrated_recovery_us_worst`` (this host's wall
     time, dispatch overhead included).
+
+    ``devices`` models mesh data parallelism over the request batch / the
+    decomposition's phase-parity axis (DESIGN.md §13): the sub-problems are
+    independent, so ``devices`` arrays stream MACs concurrently with no
+    collective on the serve path — per-device compute divides by
+    ``devices`` (throughput and batch-drain latency scale linearly), while
+    host dispatch overhead is paid once per fused dispatch regardless.
     """
     if steps < 1 or batch < 1 or scan_steps < 1:
         raise ValueError(
             f"steps/batch/scan_steps must be >= 1, got "
             f"{steps}/{batch}/{scan_steps}")
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
     dispatches = float(_ceil(steps, scan_steps))
     base = report(layers)
     ours = base["our_cycles"] * steps
@@ -368,7 +377,7 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
         # workload): zero cost, neutral ratio — not a ZeroDivisionError
         return {
             "steps": float(steps), "batch": float(batch),
-            "scan_steps": float(scan_steps),
+            "scan_steps": float(scan_steps), "devices": float(devices),
             "dispatches_per_image": dispatches,
             "cycles_per_image_ours": 0.0, "cycles_per_image_naive": 0.0,
             "latency_ms_ours": 0.0, "latency_ms_naive": 0.0,
@@ -379,34 +388,36 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
         "steps": float(steps),
         "batch": float(batch),
         "scan_steps": float(scan_steps),
+        "devices": float(devices),
         "dispatches_per_image": dispatches,
         "cycles_per_image_ours": ours,
         "cycles_per_image_naive": naive,
-        "latency_ms_ours": 1e3 * batch * ours / FREQ_HZ,
-        "latency_ms_naive": 1e3 * batch * naive / FREQ_HZ,
-        "images_per_s_ours": FREQ_HZ / ours,
-        "images_per_s_naive": FREQ_HZ / naive,
+        "latency_ms_ours": 1e3 * batch * ours / FREQ_HZ / devices,
+        "latency_ms_naive": 1e3 * batch * naive / FREQ_HZ / devices,
+        "images_per_s_ours": devices * FREQ_HZ / ours,
+        "images_per_s_naive": devices * FREQ_HZ / naive,
         "serve_speedup_vs_naive": naive / ours,
     }
     if snapshot_every > 0:
         # worst case: the crash lands one tick short of the next snapshot,
         # so snapshot_every ticks of batch x scan_steps passes replay
-        tick_cycles = batch * scan_steps * base["our_cycles"]
+        tick_cycles = batch * scan_steps * base["our_cycles"] / devices
         out["recovery_ticks_worst"] = float(snapshot_every)
         out["recovery_ms_worst"] = 1e3 * snapshot_every * tick_cycles / FREQ_HZ
     if calibration is not None:
         split = calibration.predict_layers_split(layers, backend=backend)
         if split is not None:
             compute_us, dispatch_us = split
-            us = steps * compute_us + dispatches * dispatch_us
+            us = steps * compute_us / devices + dispatches * dispatch_us
             out["calibrated_us_per_image"] = us
             out["calibrated_images_per_s"] = 1e6 / us if us else 0.0
             if snapshot_every > 0:
-                tick_us = batch * scan_steps * compute_us + dispatch_us
+                tick_us = (batch * scan_steps * compute_us / devices
+                           + dispatch_us)
                 out["calibrated_recovery_us_worst"] = snapshot_every * tick_us
     if steps_list:
         pct = serve_percentiles(layers, steps_list, batch=batch,
-                                scan_steps=scan_steps,
+                                scan_steps=scan_steps, devices=devices,
                                 calibration=calibration, backend=backend)
         out["latency_p50_ms"] = pct["latency_p50_ms"]
         out["latency_p99_ms"] = pct["latency_p99_ms"]
@@ -415,7 +426,7 @@ def serve_report(layers: list[ConvLayer], *, steps: int = 1,
 
 def serve_percentiles(layers: list[ConvLayer], steps_list: list[int], *,
                       batch: int = 1, scan_steps: int = 1, calibration=None,
-                      backend: str = "xla",
+                      backend: str = "xla", devices: int = 1,
                       pcts: tuple[float, ...] = (50.0, 99.0)
                       ) -> dict[str, float]:
     """Latency percentiles of a mixed-step request drain (DESIGN.md §9).
@@ -442,11 +453,13 @@ def serve_percentiles(layers: list[ConvLayer], steps_list: list[int], *,
     if not steps_list or min(steps_list) < 1:
         raise ValueError(f"steps_list must be non-empty positive budgets, "
                          f"got {steps_list}")
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
     pass_cycles = float(sum(cycles_our_decomposed(l) for l in layers))
-    tick_cycles = batch * scan_steps * pass_cycles
+    tick_cycles = batch * scan_steps * pass_cycles / devices
     split = (calibration.predict_layers_split(layers, backend=backend)
              if calibration is not None else None)
-    tick_us = (batch * scan_steps * split[0] + split[1]
+    tick_us = (batch * scan_steps * split[0] / devices + split[1]
                if split is not None else None)
 
     pending = list(steps_list)          # FIFO: remaining-step budgets

@@ -89,6 +89,7 @@ def conv2d(
     th: int | None = None,
     tc: int | None = None,
     compute_dtype=None,
+    phase_sharding=None,
 ) -> jax.Array:
     """General 2-D convolution with the paper's decomposition applied.
 
@@ -120,6 +121,11 @@ def conv2d(
         back in it — accumulation stays fp32 inside the Pallas kernels, and
         the epilogue's channel operands (scale/shift/alpha) stay fp32
         throughout.  ``bf16`` in -> ``bf16`` out holds on every path.
+      phase_sharding: optional hashable ``NamedSharding`` constraining the
+        decomposition's phase/parity layout on a mesh (DESIGN.md §13) — the
+        folded phase-batch of the dilated path, the per-parity-plane batch of
+        the transposed path.  XLA decomposed paths only; usually set through
+        :func:`repro.distributed.sharding.shard_conv2d` rather than directly.
     """
     if backend not in ("xla", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -154,7 +160,9 @@ def conv2d(
                         output_padding=output_padding, th=th, tc=tc,
                         interpret=interpret, epilogue=epilogue, **ep_kw)
         if decomposed:
-            y = _tr.transposed_conv2d_decomposed(x, w, stride, p, output_padding)
+            y = _tr.transposed_conv2d_decomposed(
+                x, w, stride, p, output_padding,
+                phase_sharding=phase_sharding)
         else:
             y = _tr.transposed_conv2d_naive(x, w, stride, p, output_padding)
         return apply_reference(spec, y, eps)
@@ -173,7 +181,8 @@ def conv2d(
                          interpret=interpret, epilogue=epilogue, **ep_kw)
         if decomposed:
             y = _dil.dilated_conv2d_decomposed(
-                x, w, dilation, strategy=strategy, stride=stride)
+                x, w, dilation, strategy=strategy, stride=stride,
+                phase_sharding=phase_sharding)
         else:
             y = _dil.dilated_conv2d_naive(x, w, dilation, stride=stride)
         return apply_reference(spec, y, eps)

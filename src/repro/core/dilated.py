@@ -191,7 +191,8 @@ def _class_window(x: jax.Array, d: int, row, col,
 
 
 def _dilated_strided_decomposed(x: jax.Array, w: jax.Array, d: int, s: int,
-                                strategy: str, conv_fn=None) -> jax.Array:
+                                strategy: str, conv_fn=None,
+                                phase_sharding=None) -> jax.Array:
     """Strided-dilated decomposition: class split -> strided dense conv -> stitch.
 
     ``conv_fn(xb, w, sb)`` runs a VALID dense conv at stride ``sb`` (defaults
@@ -223,7 +224,10 @@ def _dilated_strided_decomposed(x: jax.Array, w: jax.Array, d: int, s: int,
     ]
     if strategy == "batched":
         # all q*q class windows share one strided dense conv (phase-batched)
-        yb = conv_fn(jnp.concatenate(windows, axis=0), w, sb)
+        xb = jnp.concatenate(windows, axis=0)
+        if phase_sharding is not None:
+            xb = lax.with_sharding_constraint(xb, phase_sharding)
+        yb = conv_fn(xb, w, sb)
         planes = [yb[i * n : (i + 1) * n] for i in range(q * q)]
     else:  # ragged: one conv per class (paper-faithful schedule)
         planes = [conv_fn(win, w, sb) for win in windows]
@@ -236,10 +240,11 @@ def _dilated_strided_decomposed(x: jax.Array, w: jax.Array, d: int, s: int,
     return out
 
 
-@partial(jax.jit, static_argnames=("dilation", "strategy", "stride"))
+@partial(jax.jit,
+         static_argnames=("dilation", "strategy", "stride", "phase_sharding"))
 def dilated_conv2d_decomposed(
     x: jax.Array, w: jax.Array, dilation: int, strategy: str = "batched",
-    stride: int = 1,
+    stride: int = 1, phase_sharding=None,
 ) -> jax.Array:
     """The paper's method: phase decomposition -> dense conv -> stitch.
 
@@ -248,6 +253,11 @@ def dilated_conv2d_decomposed(
     dense convolution (TPU-native, beyond-paper).  Both are exact.
     ``stride > 1`` uses the output-class schedule (:func:`stride_class_schedule`)
     — ``(d/gcd(s,d))**2`` classes, each a strided VALID dense conv.
+
+    ``phase_sharding`` (a hashable ``NamedSharding``, DESIGN.md §13) constrains
+    the folded phase-batch axis of the batched strategy — the d**2 phase blocks
+    are independent, so GSPMD distributes them like data.  Static, so meshed
+    and un-meshed callers never share a trace-cache entry.
     """
     d = dilation
     if strategy not in ("ragged", "batched"):
@@ -255,7 +265,8 @@ def dilated_conv2d_decomposed(
     if d == 1:
         return dilated_conv2d_reference(x, w, 1, stride)
     if stride != 1:
-        return _dilated_strided_decomposed(x, w, d, stride, strategy)
+        return _dilated_strided_decomposed(x, w, d, stride, strategy,
+                                           phase_sharding=phase_sharding)
     k = w.shape[0]
     pad = same_pad(k)
     if strategy == "ragged":
@@ -275,6 +286,8 @@ def dilated_conv2d_decomposed(
     if strategy == "batched":
         n, h, w_, _ = x.shape
         xb, _, _ = _phase_to_batch(x, d)
+        if phase_sharding is not None:
+            xb = lax.with_sharding_constraint(xb, phase_sharding)
         yb = lax.conv_general_dilated(
             xb, w, window_strides=(1, 1), padding=[(pad, pad), (pad, pad)],
             dimension_numbers=_DIMS,

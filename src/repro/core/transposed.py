@@ -98,15 +98,22 @@ def decompose_weight(w, s: int, p_lo: int):
     return out
 
 
-@partial(jax.jit, static_argnames=("stride", "padding", "output_padding"))
+@partial(jax.jit, static_argnames=("stride", "padding", "output_padding",
+                                   "phase_sharding"))
 def transposed_conv2d_decomposed(
-    x: jax.Array, w: jax.Array, stride: int, padding: int, output_padding: int = 0
+    x: jax.Array, w: jax.Array, stride: int, padding: int,
+    output_padding: int = 0, phase_sharding=None,
 ) -> jax.Array:
     """The paper's method: per-parity sub-kernel correlation, no zero-insert.
 
     Each parity output plane is a small dense VALID correlation of the (padded)
     input with its sub-kernel; the ``s**2`` planes interleave into the output.
     MACs issued == nonzero MACs of the naive execution (exact skip).
+
+    ``phase_sharding`` (hashable ``NamedSharding``, DESIGN.md §13) constrains
+    each parity plane's correlation input on the batch axis — the s**2 parity
+    sub-problems are independent and batch-parallel.  Static, so meshed and
+    un-meshed callers never share a trace-cache entry.
     """
     s, k = stride, w.shape[0]
     if s == 1:
@@ -145,6 +152,8 @@ def transposed_conv2d_decomposed(
         )
         # crop if offsets start inside the input (pad_top < 0)
         xp = xp[:, max(-pad_top, 0):, max(-pad_left, 0):, :]
+        if phase_sharding is not None:
+            xp = lax.with_sharding_constraint(xp, phase_sharding)
         plane = lax.conv_general_dilated(
             xp, sub, window_strides=(1, 1), padding="VALID", dimension_numbers=_DIMS,
         )

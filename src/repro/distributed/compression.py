@@ -28,7 +28,10 @@ def decompress_bf16(grads):
 
 
 def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
-    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    # initial=0.0 keeps zero-size leaves legal (a reduction over an empty
+    # array has no identity otherwise) — a bias-free layer's empty grad leaf
+    # must round-trip, not crash the whole compressed all-reduce.
+    scale = jnp.maximum(jnp.max(jnp.abs(g), initial=0.0), 1e-12) / 127.0
     q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
@@ -59,3 +62,77 @@ def compress_int8_ef(grads, errors):
 
 def decompress_int8(q_tree, scale_tree):
     return jax.tree.map(dequantize_int8, q_tree, scale_tree)
+
+
+# ---------------------------------------------------------------------------
+# Wire packing (link-DMA format for the quantized tree)
+# ---------------------------------------------------------------------------
+
+def pack_int8(q_tree, *, word: int = 4):
+    """Flatten an int8 tree into ONE padded wire buffer.
+
+    Each leaf is raveled and zero-padded up to a multiple of ``word`` bytes
+    (link DMA granularity), then the chunks concatenate into a single int8
+    buffer — one transfer per step instead of one per leaf.  Odd-length,
+    scalar and zero-size leaves all pack; the manifest records each leaf's
+    shape, buffer offset and true (unpadded) length so :func:`unpack_int8`
+    restores the tree exactly.
+    """
+    if word < 1:
+        raise ValueError(f"word must be >= 1, got {word}")
+    leaves, treedef = jax.tree_util.tree_flatten(q_tree)
+    chunks, entries, off = [], [], 0
+    for leaf in leaves:
+        flat = jnp.ravel(leaf).astype(jnp.int8)
+        padded = flat.size + (-flat.size % word)
+        chunks.append(jnp.pad(flat, (0, padded - flat.size)))
+        entries.append((tuple(leaf.shape), off, flat.size))
+        off += padded
+    buf = (jnp.concatenate(chunks) if chunks
+           else jnp.zeros((0,), jnp.int8))
+    return buf, (treedef, tuple(entries))
+
+
+def unpack_int8(buf, manifest):
+    """Inverse of :func:`pack_int8`: wire buffer -> int8 tree."""
+    treedef, entries = manifest
+    leaves = [
+        jnp.reshape(jax.lax.dynamic_slice_in_dim(buf, off, size), shape)
+        for shape, off, size in entries
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Mesh all-reduce (the shard_map-side consumer, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+#: gradient wire formats for :func:`mesh_allreduce`
+TRANSPORTS = ("dense", "bf16")
+
+
+def mesh_allreduce(grads, axis_name: str, *, transport: str = "dense"):
+    """Fixed-order all-reduce of per-chunk gradient stacks.
+
+    Called inside a ``shard_map`` body where every leaf carries a leading
+    *virtual-shard* axis (the per-chunk gradients).  Each device all-gathers
+    the full chunk stack and reduces it with a single fixed-order
+    ``sum(axis=0)`` — the reduction tree is therefore identical on every mesh
+    size, which is what makes the sharded train step 1-device ≡ N-device
+    *bitwise* (a ``psum`` tree reassociates with the mesh and is not).
+
+    ``transport="bf16"`` casts the stacks to bf16 *before* the gather, so the
+    collective operand on the wire is genuinely 2x smaller in the compiled
+    HLO; decompression back to fp32 happens before the fixed-order sum.
+    Dense stays bitwise; bf16 trades bitwise parity for wire bandwidth and is
+    gated by convergence-bound tests instead.
+    """
+    if transport not in TRANSPORTS:
+        raise ValueError(f"unknown transport {transport!r}; known: {TRANSPORTS}")
+    if transport == "bf16":
+        grads = compress_bf16(grads)
+    gathered = jax.tree.map(
+        lambda g: jax.lax.all_gather(g, axis_name, axis=0, tiled=True), grads)
+    if transport == "bf16":
+        gathered = decompress_bf16(gathered)
+    return jax.tree.map(lambda g: jnp.sum(g, axis=0), gathered)

@@ -49,6 +49,11 @@ _ACT_CANDIDATES = {
     # the model axis — the phase-batched conv layouts are batch- and
     # row-parallel, XLA inserts the k-1 halo exchanges.
     "spatial": (("model",),),
+    # decomposition phase/parity axis: the d*d (or s*s) sub-problems are
+    # independent by construction (paper §II), so the folded (d*d*N) batch
+    # of the phase-batched layout shards like data — this is the
+    # embarrassingly-parallel axis DESIGN.md §13 scales over.
+    "phase": (("pod", "data"), ("data",)),
 }
 
 
@@ -189,3 +194,115 @@ def image_sharding(mesh: Mesh, shape: tuple[int, ...], *,
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh axes the batch (and the phase/parity fold) shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    return _axes_size(mesh, data_axes(mesh))
+
+
+def phase_sharding(mesh: Mesh, nphases: int, batch: int) -> NamedSharding:
+    """Sharding for the folded phase/parity axis of a decomposed layout.
+
+    The phase-batched dilated layout stacks the ``d*d`` phase blocks on the
+    batch axis (shape ``(d*d*N, H/d, W/d, C)``); each block is an independent
+    dense conv, so the folded axis shards over the data axes with the usual
+    divisibility guard (a non-dividing fold resolves to replicated).
+    """
+    spec = resolve_spec(mesh, ("phase", None, None, None),
+                        (nphases * batch, 1, 1, 1))
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Sharded conv2d entry point (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+# jitted closures cached per (mesh, option set); jax's own cache handles the
+# per-shape specialisation underneath.
+_SHARD_CONV_CACHE: dict = {}
+
+
+def pad_batch(x, multiple: int):
+    """Zero-pad the leading (batch) dim up to a multiple; returns (x, orig)."""
+    b = x.shape[0]
+    pad = (-b) % multiple
+    if pad:
+        import jax.numpy as jnp
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    return x, b
+
+
+def _shard_conv_fn(mesh: Mesh, spatial: bool, with_grads: bool, kw_items):
+    key = (mesh, spatial, with_grads, kw_items)
+    fn = _SHARD_CONV_CACHE.get(key)
+    if fn is not None:
+        return fn
+    import jax.numpy as jnp
+
+    from repro.core.decompose import conv2d as _conv2d
+
+    kw = dict(kw_items)
+
+    def fwd(x, w):
+        return _conv2d(x, w, **kw)
+
+    if with_grads:
+        def call(x, w):
+            # gradient of the sum of outputs: zero-padded batch rows are
+            # zero inputs to a linear map, so they contribute nothing to dw
+            # and their dx rows are sliced off by the caller.
+            y, vjp = jax.vjp(fwd, x, w)
+            dx, dw = vjp(jnp.ones_like(y))
+            return y, dx, dw
+    else:
+        call = fwd
+    fn = jax.jit(call, out_shardings=NamedSharding(mesh, P()))
+    _SHARD_CONV_CACHE[key] = fn
+    return fn
+
+
+def shard_conv2d(mesh: Mesh, x, w, *, spatial: bool = False,
+                 with_grads: bool = False, **conv_kwargs):
+    """Run :func:`repro.core.decompose.conv2d` sharded over ``mesh``.
+
+    The batch is zero-padded up to a multiple of the data-axis extent (uneven
+    remainders therefore work; padded rows are sliced off the output), placed
+    with :func:`image_sharding` (``spatial=True`` additionally shards H over
+    the model axis when divisible — XLA inserts the halo exchanges), and the
+    decomposed dilated path gets the folded phase axis constrained via
+    :func:`phase_sharding`.  The forward pass is bitwise-equal to the
+    single-device result; gradients reduce through GSPMD collectives and are
+    allclose, not bitwise (the bitwise training reduction lives in
+    :func:`repro.launch.train_recipes.make_sharded_train_step`).
+
+    Returns ``out`` or, with ``with_grads=True``, ``(out, dx, dw)`` where the
+    grads are of ``sum(out)``.
+    """
+    import jax.numpy as jnp
+
+    xp, b = pad_batch(jnp.asarray(x), data_axis_size(mesh))
+    kw = dict(conv_kwargs)
+    d = kw.get("dilation", 1)
+    decomposed_xla = (kw.get("decomposed", True)
+                      and kw.get("backend", "xla") == "xla")
+    if kw.get("transposed", False) and decomposed_xla:
+        # parity planes correlate the un-upsampled input batch-parallel
+        kw["phase_sharding"] = NamedSharding(
+            mesh, resolve_spec(mesh, ("data", None, None, None),
+                               (xp.shape[0], 1, 1, 1)))
+    elif (d > 1 and not kw.get("transposed", False) and decomposed_xla
+            and kw.get("strategy", "batched") == "batched"):
+        kw["phase_sharding"] = phase_sharding(mesh, d * d, xp.shape[0])
+    xp = jax.device_put(xp, image_sharding(mesh, xp.shape, spatial=spatial))
+    wd = jax.device_put(jnp.asarray(w), replicated(mesh))
+    fn = _shard_conv_fn(mesh, spatial, with_grads,
+                        tuple(sorted(kw.items(), key=lambda it: it[0])))
+    if with_grads:
+        y, dx, dw = fn(xp, wd)
+        return y[:b], dx[:b], dw
+    return fn(xp, wd)[:b]

@@ -33,3 +33,13 @@ def make_smoke_mesh(devices: int | None = None, model: int = 2):
     n = devices or len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_train_mesh(devices: int | None = None):
+    """1-D ``(data,)`` mesh for the sharded conv train step (DESIGN.md §13).
+
+    The sharded recipes chunk the batch over ``data`` only; a model axis
+    would just replicate, so the whole device count goes to data.
+    """
+    n = devices or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

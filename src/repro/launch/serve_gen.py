@@ -401,13 +401,16 @@ class _DCGANLane:
     scan_steps = 1
 
     def __init__(self, params: dict, *, batch: int, nz: int, backend: str,
-                 interpret: bool | None, decomposed: bool,
+                 interpret: bool | None, decomposed: bool, mesh=None,
                  compute_dtype: str | None = None):
         self.params = params
         self.nz = nz
         self.backend = backend
         self.decomposed, self.interpret = decomposed, interpret
         self.compute_dtype = compute_dtype
+        self.mesh = mesh
+        if mesh is not None:
+            self.params = jax.device_put(params, shd.replicated(mesh))
         self._step = jax.jit(functools.partial(
             dcgan.forward, decomposed=decomposed, backend=backend,
             interpret=interpret, compute_dtype=compute_dtype))
@@ -432,11 +435,19 @@ class _DCGANLane:
         return {"z": np.asarray(self.z)}
 
     def load_state(self, arrays: dict[str, np.ndarray]) -> None:
-        self.z = jnp.asarray(arrays["z"])
+        self.z = self._place(jnp.asarray(arrays["z"]))
+
+    def _place(self, z: jax.Array) -> jax.Array:
+        """Latent slots shard over the mesh's data axes (lanes span the
+        mesh like the diffusion lane's image state; the generator's
+        transposed-conv parity planes are batch-parallel)."""
+        if self.mesh is None:
+            return z
+        return jax.device_put(z, shd.image_sharding(self.mesh, z.shape))
 
     def _alloc(self, batch: int) -> None:
         self.batch = batch
-        self.z = jnp.zeros((batch, self.nz), jnp.float32)
+        self.z = self._place(jnp.zeros((batch, self.nz), jnp.float32))
         self.slots: list[GenRequest | None] = [None] * batch
         self.active = np.zeros(batch, bool)
 
@@ -679,7 +690,7 @@ class GenServer:
                 scan_steps=(scan_steps if scan_steps is not None
                             else self._lane_scan_steps(workload)), **kw)
         else:
-            lane = _DCGANLane(p, nz=self.dcgan_nz, **kw)
+            lane = _DCGANLane(p, nz=self.dcgan_nz, mesh=self.mesh, **kw)
         self._lanes[workload] = lane
         self._idle_ticks[workload] = 0
         return lane
@@ -971,6 +982,13 @@ class GenServer:
         cfg = {k: getattr(self, k) for k in self._CONFIG_ATTRS}
         cfg["unet_widths"] = list(self.unet_widths)
         cfg["param_seed"] = self._param_seed
+        if self.mesh is not None:
+            # geometry only — devices are process-relative.  restore()
+            # rebuilds the same (shape, axes) mesh over whatever devices
+            # exist, or reshapes onto a mesh override (resharded restore).
+            cfg["mesh"] = {"shape": [int(self.mesh.shape[a])
+                                     for a in self.mesh.axis_names],
+                           "axes": list(self.mesh.axis_names)}
         return cfg
 
     @staticmethod
@@ -1085,6 +1103,20 @@ class GenServer:
         arrays, meta = ckpt.load_flat(directory, step)
         cfg = dict(meta["config"])
         cfg["unet_widths"] = tuple(cfg["unet_widths"])
+        mesh_cfg = cfg.pop("mesh", None)
+        if mesh_cfg is not None and "mesh" not in overrides:
+            # same-geometry restore: rebuild the snapshotted mesh over this
+            # process's devices.  A *resharded* restore (different device
+            # count) passes mesh= in overrides instead; the lane state is
+            # re-placed through image_sharding either way, so the drain is
+            # bitwise regardless of the mesh it resumes on.
+            shape = tuple(mesh_cfg["shape"])
+            if math.prod(shape) > len(jax.devices()):
+                raise ValueError(
+                    f"snapshot took a {shape} mesh but only "
+                    f"{len(jax.devices())} devices exist; pass mesh= to "
+                    f"restore() to reshard")
+            cfg["mesh"] = jax.make_mesh(shape, tuple(mesh_cfg["axes"]))
         kw = dict(cfg, snapshot_dir=directory)
         kw.update(overrides)
         server = cls(**kw)
@@ -1235,6 +1267,12 @@ def main() -> None:
                     help="per-request scheduler-tick timeout")
     ap.add_argument("--autoscale", action="store_true",
                     help="grow/shrink lane batches with backlog")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="span the lanes over a mesh of this many devices "
+                         "(DESIGN.md §13; simulate on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--spatial", action="store_true",
+                    help="also shard image rows over the mesh's model axis")
     ap.add_argument("--snapshot-dir", default=None,
                     help="checkpoint scheduler state here (DESIGN.md §11); "
                          "with an existing committed snapshot the server "
@@ -1253,6 +1291,15 @@ def main() -> None:
                     autoscale=ns.autoscale,
                     snapshot_dir=ns.snapshot_dir,
                     snapshot_every=ns.snapshot_every)
+    if ns.devices > 1:
+        from repro.launch.mesh import make_smoke_mesh
+
+        if ns.devices > len(jax.devices()):
+            raise SystemExit(
+                f"--devices {ns.devices} but only {len(jax.devices())} "
+                f"devices exist (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N to simulate)")
+        kw.update(mesh=make_smoke_mesh(ns.devices), spatial=ns.spatial)
     if ns.smoke or (ns.backend == "pallas" and jax.default_backend() == "cpu"):
         # interpret-mode pallas needs tiny widths to stay tractable on CPU
         kw.update(unet_widths=(8, 8), unet_hw=4, dcgan_nz=16, dcgan_ngf=4)
@@ -1306,7 +1353,7 @@ def main() -> None:
                           steps_list=[step_list[i % len(step_list)]
                                       for i in range(ns.requests)],
                           calibration=server.calibration,
-                          backend=ns.backend)
+                          backend=ns.backend, devices=max(ns.devices, 1))
     print(f"[serve_gen] cycle model ({ns.workload}, canonical widths, "
           f"{max(step_list)} steps/sample, "
           f"{rep['dispatches_per_image']:.0f} dispatches/image): "

@@ -18,6 +18,17 @@ the same four-part bf16 contract around the model's ``forward``:
 still runs, at scale 1 if configured so) — the parity tests train both
 and compare.  Everything jits into ONE step function; the skip logic is
 branchless so a skipped step costs the same dispatch.
+
+:func:`make_sharded_train_step` is the multi-device variant (DESIGN.md
+§13): the batch is pre-chunked into a fixed number of *virtual shards*
+(independent of the mesh size), per-chunk gradients are taken under
+``shard_map`` over the data axes, and the cross-device reduction goes
+through :func:`repro.distributed.compression.mesh_allreduce` — an
+all-gather of the chunk stacks plus ONE fixed-order sum, so the
+reduction tree (and therefore every fp32 rounding) is identical on every
+mesh size.  With the dense transport the step is 1-device ≡ N-device
+*bitwise*; the bf16 transport halves the collective's wire size and is
+held to convergence bounds instead.
 """
 
 from __future__ import annotations
@@ -27,7 +38,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed import compression as _compression
+from repro.distributed import sharding as _sharding
 from repro.models import dcgan, enet, espnet
 from repro.optim import (DynamicLossScale, LossScaleState, adamw_init,
                          adamw_update, select_tree)
@@ -131,4 +146,127 @@ def make_train_step(model: str, *, backend: str = "xla",
     return step
 
 
-__all__ = ["RECIPES", "TrainState", "init_state", "make_train_step"]
+# ---------------------------------------------------------------------------
+# Sharded train step (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def shard_batch(mesh, batch: dict, *, virtual_shards: int = 8):
+    """Pre-chunk a recipe batch into ``(C, B/C, ...)`` and place it.
+
+    ``C = virtual_shards`` is FIXED (independent of the mesh), so the chunk
+    boundaries — and with them every per-chunk rounding — never move when the
+    device count changes.  The leading chunk axis shards over the mesh's data
+    axes; each device vmaps over its local chunks.
+    """
+    c = virtual_shards
+    nd = _sharding.data_axis_size(mesh)
+    if c % nd:
+        raise ValueError(
+            f"virtual_shards={c} must be a multiple of the data-axis "
+            f"extent {nd} so every device holds whole chunks")
+
+    def chunk(x):
+        b = x.shape[0]
+        if b % c:
+            raise ValueError(
+                f"batch dim {b} not divisible by virtual_shards={c}")
+        return x.reshape((c, b // c) + x.shape[1:])
+
+    axes = _sharding.data_axes(mesh)
+    spec = P(axes if len(axes) > 1 else axes[0])
+    return jax.device_put(jax.tree_util.tree_map(chunk, batch),
+                          NamedSharding(mesh, spec))
+
+
+def place_state(mesh, state: TrainState) -> TrainState:
+    """Replicate a :class:`TrainState` over every device of the mesh."""
+    return jax.device_put(state, _sharding.replicated(mesh))
+
+
+def make_sharded_train_step(model: str, mesh, *, virtual_shards: int = 8,
+                            grad_transport: str = "dense",
+                            backend: str = "xla", decomposed: bool = True,
+                            interpret: bool | None = None,
+                            compute_dtype: str | None = None,
+                            scaler: DynamicLossScale | None = None,
+                            lr: float = 1e-3, weight_decay: float = 1e-4):
+    """Jitted multi-device ``step(state, chunks) -> (state', metrics)``.
+
+    ``chunks`` comes from :func:`shard_batch` (leading virtual-shard axis
+    sharded over the mesh's data axes); ``state`` from :func:`place_state`.
+    The recipe contract is identical to :func:`make_train_step` — fp32
+    masters, fp32 loss reduction, dynamic loss scaling, branchless
+    skip-on-nonfinite — with the gradient reduction routed through
+    :func:`repro.distributed.compression.mesh_allreduce`:
+
+    * ``grad_transport="dense"`` — fp32 chunk stacks on the wire; the step is
+      **bitwise identical** on every mesh size (the fixed-order sum is the
+      only cross-chunk reduction).
+    * ``grad_transport="bf16"`` — bf16 stacks on the wire (2x smaller
+      collective in the compiled HLO); convergence-bounded, not bitwise.
+
+    XLA backend only: per-chunk gradients vmap over the model forward, and
+    the Pallas kernels' ``custom_vjp`` has no batching rule.
+    """
+    if backend != "xla":
+        raise ValueError(
+            f"sharded step requires backend='xla', got {backend!r}")
+    scaler = scaler or DynamicLossScale()
+    loss_fn = _loss_fn(model, backend=backend, decomposed=decomposed,
+                       interpret=interpret, compute_dtype=compute_dtype)
+    axes = _sharding.data_axes(mesh)
+    axis = axes if len(axes) > 1 else axes[0]
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(), P(), P(axis)), out_specs=(P(), P()),
+        check_rep=False)
+    def chunk_grads(params, scale_state, chunks):
+        # per-chunk scaled-loss gradients, SEQUENTIALLY per device: lax.map
+        # compiles one per-chunk graph applied to every chunk, so the chunk
+        # backward is identical on every mesh size (a vmap over the local
+        # chunks fuses at the local width and breaks bitwise at ~1e-8).
+        # Only the reduction order could then differ — mesh_allreduce pins it.
+        def scaled_chunk_loss(p, chunk):
+            loss = loss_fn(p, chunk)
+            return scaler.scale(scale_state, loss), loss
+
+        def one(chunk):
+            (_, loss), g = jax.value_and_grad(
+                scaled_chunk_loss, has_aux=True)(params, chunk)
+            return g, loss
+
+        grads, losses = jax.lax.map(one, chunks)
+        grads = _compression.mesh_allreduce(grads, axis,
+                                            transport=grad_transport)
+        losses = jax.lax.all_gather(losses, axis, axis=0, tiled=True)
+        return grads, losses
+
+    @jax.jit
+    def step(state: TrainState, chunks: dict):
+        grad_sum, losses = chunk_grads(state.params, state.scale, chunks)
+        # equal-size chunks: the batch mean is the mean of chunk means
+        loss = jnp.sum(losses.astype(jnp.float32)) / virtual_shards
+        grads = scaler.unscale(state.scale, grad_sum)
+        grads = jax.tree_util.tree_map(
+            lambda g: g / virtual_shards, grads)
+        finite = scaler.all_finite(grads)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, grads)
+        safe = select_tree(finite, grads, zeros)
+        new_params, new_opt, gnorm = adamw_update(
+            safe, state.opt, state.params, lr=jnp.float32(lr),
+            weight_decay=weight_decay)
+        new_params = select_tree(finite, new_params, state.params)
+        new_opt = select_tree(finite, new_opt, state.opt)
+        scale_state = scaler.update(state.scale, finite)
+        metrics = {"loss": loss,
+                   "grad_norm": jnp.where(finite, gnorm, 0.0),
+                   "scale": scale_state.scale,
+                   "skipped": 1.0 - finite.astype(jnp.float32)}
+        return TrainState(new_params, new_opt, scale_state), metrics
+
+    return step
+
+
+__all__ = ["RECIPES", "TrainState", "init_state", "make_train_step",
+           "shard_batch", "place_state", "make_sharded_train_step"]

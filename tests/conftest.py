@@ -3,9 +3,66 @@
 The autotune cache is machine-global state (``~/.cache/repro-autotune``);
 tests and the benchmark helpers some tests invoke must never write noise
 timings there, so every test session gets a throwaway cache directory.
+
+The ``mesh``-marked multi-device tests (DESIGN.md §13: sharded train
+parity, mesh serving, failover drills) need a simulated multi-device CPU
+client.  That session is OPT-IN:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 pytest -q -m mesh
+
+(what the CI mesh step and the README quickstart run); ``REPRO_FAKE_DEVICES=1``
+below merges the flag in for convenience.  It is deliberately NOT forced on
+the whole tier-1 session: a long-lived 8-fake-device client segfaults XLA's
+CPU compiler a few hundred compilations in (reproducibly, deep in
+``backend_compile``), while the short ``-m mesh`` session is fine.  Without
+the flag the ``mesh_devices`` fixture skips the mesh tier cleanly.
 """
 
-import pytest
+import os
+
+if os.environ.get("REPRO_FAKE_DEVICES"):
+    _flag = "--xla_force_host_platform_device_count=8"
+    _prev = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _prev:
+        os.environ["XLA_FLAGS"] = f"{_prev} {_flag}".strip()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_executables():
+    """Unmap each module's compiled executables when the module finishes.
+
+    Every jitted computation XLA compiles stays mmapped for the life of the
+    process; across the full one-process suite (~1000 tests, thousands of
+    compilations) that walks straight into the kernel's default
+    ``vm.max_map_count`` (65530) and XLA's CPU compiler SEGFAULTS mid-
+    ``backend_compile``.  Dropping the jit caches at module teardown bounds
+    the live map count by the heaviest single module instead of the whole
+    suite.  Caches are performance-only state — later modules recompile
+    what they share, which costs seconds, not correctness.
+    """
+    yield
+    import sys
+
+    jax = sys.modules.get("jax")
+    if jax is not None:
+        jax.clear_caches()
+
+
+@pytest.fixture(scope="session")
+def mesh_devices():
+    """Device count available to ``mesh``-marked tests; skips the test when
+    the session opted out of fake devices and real ones are scarce."""
+    import jax
+
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip(
+            "multi-device mesh tests need >= 2 devices (run with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "or REPRO_FAKE_DEVICES=1)")
+    return n
 
 
 @pytest.fixture(autouse=True, scope="session")

@@ -293,3 +293,60 @@ def test_auto_snapshot_cadence_and_gc(tmp_path):
     steps = ckpt.all_steps(d)
     assert len(steps) <= 2                  # keep= GC bound holds
     assert steps[-1] <= server._tick
+
+
+# ------------------------------------------------- heartbeat failover ---
+
+def test_pool_drain_no_fault_bitwise(tmp_path):
+    """A multi-host pool with nobody dying is just a scheduler shuffle:
+    every image must match the single-server reference bitwise."""
+    from repro.launch.failover import FailoverPool
+
+    ref = GenServer(**_KW)
+    rids = _submit_mix(ref)
+    ref_imgs = ref.run()
+
+    pool = FailoverPool(str(tmp_path / "hb"), hosts=2, timeout_s=30.0,
+                        server_kw=_KW)
+    toks = [pool.submit(wl, steps=s, seed=100 + i, slo=slo)
+            for i, (wl, s, slo) in enumerate(_MIX)]
+    out = pool.drain()
+    assert pool.stats()["dead_hosts"] == 0 and not pool.failovers
+    _assert_bitwise_equal({rids[i]: out[t] for i, t in enumerate(toks)},
+                          ref_imgs)
+
+
+def test_heartbeat_failover_drain_bitwise(tmp_path):
+    """The DESIGN.md §13 chaos drill: a host dies before serving anything
+    it owns — it stops beating, the monitor flags the stale heartbeat, its
+    requests reassign to survivors, and the completed drain is bitwise
+    equal to the no-fault run (requests are pure functions of
+    ``(workload, steps, seed)``, so a different host must produce the
+    same bits)."""
+    import time
+
+    from repro.launch.failover import FailoverPool
+
+    ref = GenServer(**_KW)
+    rids = _submit_mix(ref)
+    ref_imgs = ref.run()
+
+    pool = FailoverPool(str(tmp_path / "hb"), hosts=3, timeout_s=0.1,
+                        server_kw=_KW)
+    toks = [pool.submit(wl, steps=s, seed=100 + i, slo=slo)
+            for i, (wl, s, slo) in enumerate(_MIX)]
+    victim = 1
+    owned = [t for t, (h, _) in pool._where.items() if h == victim]
+    assert owned                            # round-robin gave it work
+    pool.kill_host(victim)
+    time.sleep(0.15)                        # let the last beat go stale
+    out = pool.drain()
+
+    st = pool.stats()
+    assert st["dead_hosts"] == 1 and st["completed"] == len(_MIX)
+    moved = {t for t, _, _ in pool.failovers}
+    assert moved == set(owned)              # exactly the victim's inventory
+    assert all(frm == victim and to != victim
+               for _, frm, to in pool.failovers)
+    _assert_bitwise_equal({rids[i]: out[t] for i, t in enumerate(toks)},
+                          ref_imgs)

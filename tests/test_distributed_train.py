@@ -1,0 +1,125 @@
+"""Sharded ENet train-step parity on the simulated mesh (DESIGN.md §13).
+
+The acceptance bar of the sharding issue: a 3-step sharded ENet run on the
+8-device CPU mesh is BITWISE identical to the 1-device run — same params,
+same losses — because (a) the batch is pre-chunked into mesh-independent
+virtual shards, (b) per-chunk gradients come from ONE compiled per-chunk
+graph (``lax.map``, not a width-dependent vmap), and (c) the cross-device
+reduction is an all-gather plus fixed-order sum (``mesh_allreduce``), never
+a mesh-shaped psum tree.
+
+The bf16 wire transport halves the collective operand and is held to a
+loss-level convergence bound instead (its params legitimately drift: AdamW
+divides by rounding-scale gradient moments).
+
+Everything here shares one module-scoped fixture — each mesh config costs a
+full ENet fwd+bwd compile, so runs are computed once and asserted many
+times.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import train_recipes as tr
+from repro.launch.mesh import make_train_mesh
+from repro.models import enet
+
+_B, _HW, _NC = 8, 16, 4
+_STEPS = 3
+
+
+def _batch():
+    rng = np.random.default_rng(0)
+    return {
+        "image": jnp.asarray(rng.normal(size=(_B, _HW, _HW, 3)),
+                             jnp.float32),
+        "label": jnp.asarray(rng.integers(0, _NC, (_B, _HW, _HW)),
+                             jnp.int32),
+    }
+
+
+def _init_state():
+    params = enet.init_params(jax.random.PRNGKey(0), num_classes=_NC)
+    return tr.init_state(params)
+
+
+def _run_sharded(nd, transport):
+    mesh = make_train_mesh(nd)
+    step = tr.make_sharded_train_step("enet", mesh, grad_transport=transport)
+    state = tr.place_state(mesh, _init_state())
+    chunks = tr.shard_batch(mesh, _batch())
+    losses = []
+    for _ in range(_STEPS):
+        state, metrics = step(state, chunks)
+        losses.append(float(metrics["loss"]))
+        assert float(metrics["skipped"]) == 0.0
+    return jax.device_get(state.params), losses
+
+
+@pytest.fixture(scope="module")
+def runs(mesh_devices):
+    if mesh_devices < 8:
+        pytest.skip(f"mesh parity fixture wants 8 devices, have "
+                    f"{mesh_devices}")
+    return {
+        (1, "dense"): _run_sharded(1, "dense"),
+        (8, "dense"): _run_sharded(8, "dense"),
+        (8, "bf16"): _run_sharded(8, "bf16"),
+    }
+
+
+@pytest.mark.mesh
+def test_enet_sharded_step_bitwise_1_vs_8(runs):
+    p1, l1 = runs[(1, "dense")]
+    p8, l8 = runs[(8, "dense")]
+    assert l1 == l8                      # float-exact loss trace
+    leaves1 = jax.tree_util.tree_leaves(p1)
+    leaves8 = jax.tree_util.tree_leaves(p8)
+    assert len(leaves1) == len(leaves8)
+    for a, b in zip(leaves1, leaves8):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.mesh
+def test_bf16_transport_loss_convergence_bound(runs):
+    _, dense = runs[(8, "dense")]
+    _, bf16 = runs[(8, "bf16")]
+    # the wire cast rounds gradients, not the loss: each step's objective
+    # must track the dense run tightly even as params drift
+    for ld, lb in zip(dense, bf16):
+        assert abs(ld - lb) <= 5e-3 * max(abs(ld), 1.0), (dense, bf16)
+    assert bf16[-1] < bf16[0]            # and it still trains
+
+
+@pytest.mark.mesh
+def test_unsharded_step_agrees_on_loss(runs):
+    """The sharded chunk-mean-of-means equals the plain batch mean up to
+    reassociation — the single-graph recipe step must see the same first
+    loss to float tolerance."""
+    step = tr.make_train_step("enet")
+    state, metrics = step(_init_state(), _batch())
+    _, losses = runs[(1, "dense")]
+    np.testing.assert_allclose(float(metrics["loss"]), losses[0],
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------- plumbing guards ---
+
+def test_shard_batch_validation(mesh_devices):
+    mesh = make_train_mesh(min(4, mesh_devices))
+    with pytest.raises(ValueError, match="virtual_shards"):
+        tr.shard_batch(mesh, _batch(), virtual_shards=6)
+    with pytest.raises(ValueError, match="not divisible"):
+        tr.shard_batch(mesh, {"image": jnp.zeros((6, 4, 4, 3))},
+                       virtual_shards=4)
+    chunks = tr.shard_batch(mesh, _batch(), virtual_shards=8)
+    assert chunks["image"].shape == (8, _B // 8, _HW, _HW, 3)
+    assert chunks["label"].shape == (8, _B // 8, _HW, _HW)
+
+
+def test_sharded_step_rejects_pallas():
+    mesh = make_train_mesh(1)
+    with pytest.raises(ValueError, match="xla"):
+        tr.make_sharded_train_step("enet", mesh, backend="pallas")

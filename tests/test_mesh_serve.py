@@ -1,0 +1,128 @@
+"""Multi-device generative serving on the simulated mesh (DESIGN.md §13).
+
+The serving acceptance bar: a GenServer whose lanes span a 4-device
+``(data,)`` mesh (PR 5's ``image_sharding`` hook carrying real shards at
+last) drains a mixed-step queue to images BITWISE equal to the unbatched
+single-device reference loop — GSPMD moves the slots, never the bits.
+Snapshot/restore round-trips the mesh geometry, including a *resharded*
+restore onto a different device count, and the cycle model's
+``serve_report(devices=N)`` prices the collective-free data parallelism.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import cycle_model as cm
+from repro.core.gen_spec import GEN_WORKLOADS
+from repro.launch.mesh import make_train_mesh
+from repro.launch.serve_gen import GenServer, reference_sample
+
+_WIDTHS = (8, 8)
+_HW = 4
+_SIZE = _HW * 2 ** len(_WIDTHS)
+
+_KW = dict(batch=4, unet_widths=_WIDTHS, unet_hw=_HW, dcgan_nz=16,
+           dcgan_ngf=4, scan_steps=2)
+
+_STEPS = (4, 2, 3, 5, 1, 6)
+
+
+def _submit(server):
+    return [server.submit("unet_dec", steps=s, seed=40 + i)
+            for i, s in enumerate(_STEPS)]
+
+
+@pytest.mark.mesh
+def test_4device_drain_matches_unbatched_reference(mesh_devices):
+    nd = min(4, mesh_devices)
+    srv = GenServer(mesh=make_train_mesh(nd), **_KW)
+    rids = _submit(srv)
+    images = srv.run()
+    assert sorted(images) == sorted(rids)
+    denoiser = srv._lanes["unet_dec"].params
+    for i, rid in enumerate(rids):
+        ref = reference_sample(denoiser, steps=_STEPS[i], seed=40 + i,
+                               image_size=_SIZE)
+        np.testing.assert_array_equal(images[rid], ref), rid
+
+
+@pytest.mark.mesh
+def test_dcgan_lane_spans_mesh_bitwise(mesh_devices):
+    """The single-shot GAN lane places its latent slots over the mesh's
+    data axes; same seeds => same bits as the un-meshed server."""
+    plain = GenServer(**_KW)
+    rids = [plain.submit("dcgan64", seed=7 + i) for i in range(4)]
+    ref = plain.run()
+
+    meshed = GenServer(mesh=make_train_mesh(min(4, mesh_devices)), **_KW)
+    rids_m = [meshed.submit("dcgan64", seed=7 + i) for i in range(4)]
+    out = meshed.run()
+    for r, m in zip(rids, rids_m):
+        np.testing.assert_array_equal(out[m], ref[r])
+
+
+@pytest.mark.mesh
+def test_resharded_restore_round_trip(tmp_path, mesh_devices):
+    """A meshed drain snapshotted mid-flight restores (a) onto the SAME
+    rebuilt mesh geometry by default and (b) onto a DIFFERENT device count
+    via the ``mesh=`` override — both finish bitwise-equal to the
+    uninterrupted run (lane state snapshots as plain host arrays; the mesh
+    is where work lands, not what the bits depend on)."""
+    nd = min(4, mesh_devices)
+    ref_srv = GenServer(mesh=make_train_mesh(nd), scan_steps=1,
+                        **{k: v for k, v in _KW.items()
+                           if k != "scan_steps"})
+    _submit(ref_srv)
+    ref = ref_srv.run()
+
+    kw = dict(_KW, scan_steps=1)
+    d = str(tmp_path / "snap")
+    srv = GenServer(mesh=make_train_mesh(nd), snapshot_dir=d,
+                    snapshot_every=1, **kw)
+    _submit(srv)
+    srv.step()
+    srv.step()                          # mid-flight snapshots on disk
+
+    same = GenServer.restore(d)
+    assert same.mesh is not None
+    assert dict(same.mesh.shape) == {"data": nd}     # geometry rebuilt
+    imgs_same = same.run()
+    assert sorted(imgs_same) == sorted(ref)
+    for rid in ref:
+        np.testing.assert_array_equal(imgs_same[rid], ref[rid]), rid
+
+    resharded = GenServer.restore(d, mesh=make_train_mesh(2))
+    assert dict(resharded.mesh.shape) == {"data": 2}
+    imgs_re = resharded.run()
+    for rid in ref:
+        np.testing.assert_array_equal(imgs_re[rid], ref[rid]), rid
+
+
+# ------------------------------------------------------------ cycle model ---
+
+def test_serve_report_devices_scaling():
+    """Phase/parity data parallelism is collective-free: N devices divide
+    the compute cycles exactly, so modeled throughput scales linearly and
+    per-image latency drops N-fold; dispatch bookkeeping is per-request
+    and does not shrink."""
+    layers = GEN_WORKLOADS["dcgan64"]()
+    base = cm.serve_report(layers, steps=1)
+    quad = cm.serve_report(layers, steps=1, devices=4)
+    assert base["devices"] == 1 and quad["devices"] == 4
+    np.testing.assert_allclose(quad["images_per_s_ours"],
+                               4 * base["images_per_s_ours"], rtol=1e-9)
+    np.testing.assert_allclose(quad["latency_ms_ours"],
+                               base["latency_ms_ours"] / 4, rtol=1e-9)
+    assert quad["dispatches_per_image"] == base["dispatches_per_image"]
+    # speedup vs naive is device-count-invariant (both sides scale)
+    np.testing.assert_allclose(quad["serve_speedup_vs_naive"],
+                               base["serve_speedup_vs_naive"], rtol=1e-9)
+
+
+def test_serve_report_devices_validation():
+    layers = GEN_WORKLOADS["dcgan64"]()
+    with pytest.raises(ValueError, match="devices"):
+        cm.serve_report(layers, devices=0)
+    with pytest.raises(ValueError, match="devices"):
+        cm.serve_percentiles(layers, [1, 1], devices=-1)

@@ -102,6 +102,79 @@ def test_moe_dense_ffn_rules_distinct():
         P(None, "model", None, "data")
 
 
+# --------------------------------------------------------------------------
+# Multi-device conv parity grid (DESIGN.md §13) — runs in-process on the
+# simulated 8-device CPU mesh (the opt-in XLA_FLAGS fake-device session,
+# see conftest.py).  Forward sharding is GSPMD over the
+# batch (plus the decomposed phase/parity fold) and must be BITWISE equal to
+# the single-device result; gradients recompose through different fusion
+# boundaries, so they are held to allclose.
+# --------------------------------------------------------------------------
+
+import numpy as np  # noqa: E402
+
+#: the three engine kinds of the paper's decomposition, with uneven extents
+#: (B=5, H=13 divide none of the mesh sizes — the pad_batch remainder path)
+_ENGINES = {
+    "dense": dict(dilation=1),
+    "dilated": dict(dilation=2),
+    "tconv": dict(transposed=True, stride=2),
+}
+
+
+def _conv_case(kind):
+    import jax
+    import jax.numpy as jnp
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(11))
+    x = jax.random.normal(kx, (5, 13, 13, 3), jnp.float32)
+    w = jax.random.normal(kw, (3, 3, 3, 4), jnp.float32)
+    return x, w, dict(_ENGINES[kind])
+
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("nd", [1, 2, 4, 8])
+@pytest.mark.parametrize("kind", sorted(_ENGINES))
+def test_shard_conv2d_parity_grid(kind, nd, mesh_devices):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.decompose import conv2d
+    from repro.distributed.sharding import shard_conv2d
+    from repro.launch.mesh import make_train_mesh
+
+    if nd > mesh_devices:
+        pytest.skip(f"need {nd} devices, have {mesh_devices}")
+    x, w, kw = _conv_case(kind)
+    mesh = make_train_mesh(nd)
+
+    ref = conv2d(x, w, **kw)
+    y, dx, dw = shard_conv2d(mesh, x, w, with_grads=True, **kw)
+    assert np.array_equal(np.asarray(y), np.asarray(ref)), kind
+
+    ry, vjp = jax.vjp(lambda xx, ww: conv2d(xx, ww, **kw), x, w)
+    rdx, rdw = vjp(jnp.ones_like(ry))
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rdx),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(rdw),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.mesh
+def test_shard_conv2d_spatial_dilated(mesh_devices):
+    """Spatial (H) sharding on top of the batch axis: the dilated phase
+    fold subdivides H by the dilation, so the halo-free phase view must
+    still match the single-device result bitwise."""
+    from repro.core.decompose import conv2d
+    from repro.distributed.sharding import shard_conv2d
+    from repro.launch.mesh import make_smoke_mesh
+
+    x, w, kw = _conv_case("dilated")
+    mesh = make_smoke_mesh(min(4, mesh_devices))
+    y = shard_conv2d(mesh, x, w, spatial=True, **kw)
+    assert np.array_equal(np.asarray(y), np.asarray(conv2d(x, w, **kw)))
+
+
 @pytest.mark.slow
 def test_small_mesh_lower_and_compile():
     """Subprocess with 8 fake devices: reduced arch lowers + compiles with

@@ -150,6 +150,33 @@ def test_zero_conv_planes_k_lt_s():
         assert np.all(y[:, :, r::s, :] == 0.0)
 
 
+# ------------------------------------------------- sharded sweep (DESIGN §13) ---
+
+@pytest.mark.mesh
+@pytest.mark.parametrize("nd", [2, 4, 8])
+@pytest.mark.parametrize("case", _FAST[:3],
+                         ids=lambda c: "h{}w{}c{}x{}k{}s{}p{}op{}".format(*c))
+def test_random_geometry_sharded(case, nd, mesh_devices):
+    """Seeded random geometries on the simulated mesh: the sharded engine
+    must equal the unsharded decomposed result BITWISE (same decomposition,
+    same per-device arithmetic — GSPMD only moves the batch/parity tiles)
+    and stay within the engine-parity bar of the ``lax`` oracle."""
+    from repro.distributed.sharding import shard_conv2d
+    from repro.launch.mesh import make_train_mesh
+
+    if nd > mesh_devices:
+        pytest.skip(f"need {nd} devices, have {mesh_devices}")
+    h, w, cin, cout, k, s, p_lo, op = case
+    x, wgt = _operands(case)
+    unsharded = tr.transposed_conv2d_decomposed(x, wgt, s, p_lo, op)
+    sharded = shard_conv2d(make_train_mesh(nd), x, wgt, stride=s,
+                           transposed=True, padding=p_lo, output_padding=op)
+    assert np.array_equal(np.asarray(sharded), np.asarray(unsharded))
+    assert_allclose(np.asarray(sharded),
+                    np.asarray(_lax_oracle(x, wgt, s, p_lo, op)),
+                    rtol=1e-5, atol=1e-5)
+
+
 # ----------------------------------------------------------- full slow grid ---
 
 @pytest.mark.slow
